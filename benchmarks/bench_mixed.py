@@ -1,0 +1,65 @@
+"""Paper Figure 6 / Table 2 Mix rows: 60/40 write-to-read mixed workload."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.cluster.clusters import BigsetCluster, RiakSetCluster
+
+
+def run_mixed(cluster, n_keys: int, n_ops: int, seed: int = 0,
+              preload: int = 1000):
+    rng = np.random.default_rng(seed)
+    w_lat, r_lat = [], []
+    counters = [0] * n_keys
+    # paper's mixed runs hit ~1k-cardinality sets; preload to match
+    for k in range(n_keys):
+        S = b"set%03d" % k
+        for i in range(preload):
+            cluster.add(S, i.to_bytes(4, "big"), coordinator=i % 3)
+        counters[k] = preload
+    t0 = time.perf_counter()
+    for i in range(n_ops):
+        k = int(rng.integers(n_keys))
+        S = b"set%03d" % k
+        if rng.random() < 0.6:  # 60% writes
+            t1 = time.perf_counter()
+            cluster.add(S, counters[k].to_bytes(4, "big"), coordinator=i % 3)
+            w_lat.append(time.perf_counter() - t1)
+            counters[k] += 1
+        else:
+            t1 = time.perf_counter()
+            cluster.value(S, r=1)
+            r_lat.append(time.perf_counter() - t1)
+    wall = time.perf_counter() - t0
+    io = cluster.io_stats()
+    return {
+        "tp": n_ops / wall,
+        "w_mean_us": float(np.mean(w_lat) * 1e6) if w_lat else 0.0,
+        "w_p99_us": float(np.percentile(w_lat, 99) * 1e6) if w_lat else 0.0,
+        "r_mean_us": float(np.mean(r_lat) * 1e6) if r_lat else 0.0,
+        "r_p99_us": float(np.percentile(r_lat, 99) * 1e6) if r_lat else 0.0,
+        "io_bytes": io.bytes_read + io.bytes_written,
+    }
+
+
+def main(n_keys=10, n_ops=1500, quick=False) -> List[str]:
+    preload = 1000
+    if quick:
+        n_keys, n_ops, preload = 6, 300, 150
+    rows = []
+    for name, cls in (("riak", RiakSetCluster), ("bigset", BigsetCluster)):
+        r = run_mixed(cls(3), n_keys, n_ops, preload=preload)
+        rows.append(
+            f"mixed60w40r/{name},{1e6 / r['tp']:.1f},"
+            f"tp={r['tp']:.0f};w_mean={r['w_mean_us']:.0f}us;"
+            f"w_p99={r['w_p99_us']:.0f}us;r_mean={r['r_mean_us']:.0f}us;"
+            f"r_p99={r['r_p99_us']:.0f}us;io={r['io_bytes']}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

@@ -1,0 +1,88 @@
+"""Paper Table 2 / Figures 4-5: read performance vs cardinality.
+
+Pareto-distributed reads over many keys (paper: 1000 keys); bigset reads
+stream a fold + quorum merge, Riak reads deserialize the blob.  Also
+benchmarks the §4.4 queries (is_member / range) that the paper argues
+mitigate the full-read penalty — a blob store must deserialize everything
+for the same answer.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.cluster.clusters import BigsetCluster, RiakSetCluster
+
+
+def build(cluster, n_keys: int, card: int):
+    for k in range(n_keys):
+        S = b"set%03d" % k
+        for i in range(card):
+            cluster.add(S, i.to_bytes(4, "big"), coordinator=i % 3)
+    return cluster
+
+
+def run_reads(cluster, n_keys: int, n_reads: int, r: int = 1,
+              seed: int = 0) -> Dict[str, float]:
+    rng = np.random.default_rng(seed)
+    # pareto-ish key popularity (paper cites Petersen's pareto estimation)
+    ranks = (rng.pareto(1.5, size=n_reads) * 2).astype(int) % n_keys
+    lat = []
+    t0 = time.perf_counter()
+    for k in ranks:
+        t1 = time.perf_counter()
+        _ = cluster.value(b"set%03d" % int(k), r=r)
+        lat.append(time.perf_counter() - t1)
+    wall = time.perf_counter() - t0
+    lat_us = np.array(lat) * 1e6
+    return {
+        "throughput_ops_s": n_reads / wall,
+        "mean_us": float(lat_us.mean()),
+        "p99_us": float(np.percentile(lat_us, 99)),
+    }
+
+
+def run_queries(cluster: BigsetCluster, n_keys: int, n_ops: int) -> Dict[str, float]:
+    rng = np.random.default_rng(1)
+    t0 = time.perf_counter()
+    for i in range(n_ops):
+        S = b"set%03d" % int(rng.integers(n_keys))
+        vn = cluster.vnodes[cluster.actors[i % 3]]
+        vn.is_member(S, int(rng.integers(4096)).to_bytes(4, "big"))
+    member_tp = n_ops / (time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    for i in range(n_ops):
+        S = b"set%03d" % int(rng.integers(n_keys))
+        vn = cluster.vnodes[cluster.actors[i % 3]]
+        vn.range_query(S, int(rng.integers(2048)).to_bytes(4, "big"), 10)
+    range_tp = n_ops / (time.perf_counter() - t0)
+    return {"member_tp": member_tp, "range_tp": range_tp}
+
+
+def main(cards=(100, 500, 1500), n_keys=10, n_reads=120, quick=False) -> List[str]:
+    if quick:
+        cards, n_keys, n_reads = (50, 200), 6, 40
+    rows = []
+    for card in cards:
+        riak = build(RiakSetCluster(3), n_keys, card)
+        big = build(BigsetCluster(3), n_keys, card)
+        big.compact_all()
+        rr = run_reads(riak, n_keys, n_reads)
+        rb = run_reads(big, n_keys, n_reads)
+        rows.append(f"reads/riak/{card},{1e6 / rr['throughput_ops_s']:.1f},"
+                    f"tp={rr['throughput_ops_s']:.0f};mean={rr['mean_us']:.0f}us;"
+                    f"p99={rr['p99_us']:.0f}us")
+        rows.append(f"reads/bigset/{card},{1e6 / rb['throughput_ops_s']:.1f},"
+                    f"tp={rb['throughput_ops_s']:.0f};mean={rb['mean_us']:.0f}us;"
+                    f"p99={rb['p99_us']:.0f}us")
+        q = run_queries(big, n_keys, n_reads)
+        rows.append(f"queries/bigset/{card},{1e6 / q['member_tp']:.1f},"
+                    f"member_tp={q['member_tp']:.0f};range_tp={q['range_tp']:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

@@ -1,0 +1,61 @@
+"""Paper Table 1 / Figures 1-3: write performance vs cardinality.
+
+Inserts N unique elements (4-byte, as in the paper) into one set on a
+3-replica cluster for each contender — Riak Sets (full-state), Deltas
+(delta replication, full-state disk), Bigsets — measuring throughput,
+mean/95th latency, and the byte cost the paper's §2.1 analysis predicts:
+O(n²) lifetime bytes for blob-backed sets vs O(n·Δ) for bigset.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.cluster.clusters import BigsetCluster, DeltaCluster, RiakSetCluster
+
+
+def run_writes(cluster, n: int) -> Dict[str, float]:
+    S = b"s"
+    lat = []
+    t0 = time.perf_counter()
+    for i in range(n):
+        elem = i.to_bytes(4, "big")           # 4-byte elements, as in paper
+        t1 = time.perf_counter()
+        cluster.add(S, elem, coordinator=i % 3)
+        lat.append(time.perf_counter() - t1)
+    wall = time.perf_counter() - t0
+    io = cluster.io_stats()
+    lat_us = np.array(lat) * 1e6
+    return {
+        "ops": n,
+        "throughput_ops_s": n / wall,
+        "mean_us": float(lat_us.mean()),
+        "p95_us": float(np.percentile(lat_us, 95)),
+        "bytes_read": io.bytes_read,
+        "bytes_written": io.bytes_written,
+        "net_bytes": cluster.net.bytes_sent,
+        "bytes_per_op": (io.bytes_read + io.bytes_written) / n,
+    }
+
+
+def main(cards=(500, 2000, 5000), quick=False) -> List[str]:
+    if quick:
+        cards = (200, 500, 1000)
+    rows = []
+    for n in cards:
+        for name, cls in (("riak", RiakSetCluster), ("delta", DeltaCluster),
+                          ("bigset", BigsetCluster)):
+            r = run_writes(cls(3), n)
+            rows.append(
+                f"writes/{name}/{n},{1e6 / r['throughput_ops_s']:.1f},"
+                f"tp={r['throughput_ops_s']:.0f}ops/s;mean={r['mean_us']:.0f}us;"
+                f"p95={r['p95_us']:.0f}us;bytes_per_op={r['bytes_per_op']:.0f};"
+                f"net={r['net_bytes']}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

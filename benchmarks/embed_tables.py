@@ -1,0 +1,67 @@
+"""Embed the generated roofline tables + hillclimb comparisons into
+EXPERIMENTS.md (between the marker comments)."""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+from . import roofline
+
+ROOT = Path(__file__).resolve().parents[1]
+ART = ROOT / "benchmarks" / "artifacts" / "dryrun"
+
+
+def variant_rows() -> str:
+    """Baseline-vs-variant table for every tagged artifact."""
+    out = [
+        "| cell | variant | compute | memory | collective | dominant | "
+        "mem GiB (base→var) | frac (base→var) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for p in sorted(ART.glob("*__single__*.json")):
+        parts = p.stem.split("__")
+        arch, shape, _, variant = parts[0], parts[1], parts[2], parts[3]
+        var = json.loads(p.read_text())
+        base_p = ART / f"{arch}__{shape}__single.json"
+        if not base_p.exists() or "skipped" in var:
+            continue
+        base = json.loads(base_p.read_text())
+        b, v = base["roofline"], var["roofline"]
+        bm = base["memory"]["peak_estimate_bytes"] / 2**30
+        vm = var["memory"]["peak_estimate_bytes"] / 2**30
+
+        def delta(key):
+            base_v, var_v = b[key], v[key]
+            if base_v <= 0:
+                return "—"
+            return f"{roofline.fmt_s(var_v)} ({(var_v - base_v) / base_v * 100:+.0f}%)"
+
+        out.append(
+            f"| {arch} × {shape} | {variant} | {delta('t_compute_s')} | "
+            f"{delta('t_memory_s')} | {delta('t_collective_s')} | "
+            f"{b['dominant']}→{v['dominant']} | {bm:.1f}→{vm:.1f} | "
+            f"{b['roofline_fraction']:.3f}→{v['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    exp = (ROOT / "EXPERIMENTS.md").read_text()
+    table = roofline.table("single")
+    multi = roofline.table("multi")
+    block = (f"### Single-pod (16×16 = 256 chips)\n\n{table}\n\n"
+             f"### Multi-pod (2×16×16 = 512 chips)\n\n{multi}\n")
+    exp = re.sub(
+        r"<!-- ROOFLINE_TABLE_SINGLE -->.*?(?=\n\(regenerate)",
+        f"<!-- ROOFLINE_TABLE_SINGLE -->\n{block}",
+        exp, flags=re.S)
+    exp = re.sub(
+        r"<!-- PERF_CELLS -->.*?(?=\n## §Kernels|\Z)",
+        f"<!-- PERF_CELLS -->\n\n{variant_rows()}\n",
+        exp, flags=re.S)
+    (ROOT / "EXPERIMENTS.md").write_text(exp)
+    print("embedded tables into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark runner: one section per paper table/figure + framework planes.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` shrinks sizes
+(used by the test suite); full mode is the reported configuration.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: writes,reads,mixed,ckpt,kernels,roofline")
+    args = ap.parse_args(argv)
+
+    from . import (bench_checkpoint, bench_kernels, bench_mixed, bench_reads,
+                   bench_writes, roofline)
+
+    sections = {
+        "writes": lambda: bench_writes.main(quick=args.quick),     # Tab1/Fig1-3
+        "reads": lambda: bench_reads.main(quick=args.quick),       # Tab2/Fig4-5
+        "mixed": lambda: bench_mixed.main(quick=args.quick),       # Fig6
+        "ckpt": lambda: bench_checkpoint.main(quick=args.quick),   # framework
+        "kernels": lambda: bench_kernels.main(quick=args.quick),
+        "roofline": roofline.main,                                  # from dry-run
+    }
+    only = set(args.only.split(",")) if args.only else set(sections)
+
+    print("name,us_per_call,derived")
+    for name, fn in sections.items():
+        if name not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            for row in fn():
+                print(row)
+        except Exception as e:  # keep the harness running
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
+            raise
+        print(f"# section {name} took {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

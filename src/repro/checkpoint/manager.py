@@ -1,0 +1,59 @@
+"""Pytree ⇄ shard-dict bridging for BigStore checkpoints.
+
+Shard naming uses the pytree key-path (ordered, so the restore fold streams
+shards in path order — the §4.4 lexicographic property is what lets a
+restore begin materialising the state before the fold completes).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def flatten_state(state) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        out[_path_str(path)] = np.asarray(leaf)
+    return out
+
+
+def state_shard_names(state) -> List[str]:
+    return sorted(flatten_tree_paths(state))
+
+
+def flatten_tree_paths(state) -> List[str]:
+    return [
+        _path_str(p) for p, _ in jax.tree_util.tree_flatten_with_path(state)[0]
+    ]
+
+
+def unflatten_state(template, shards: Dict[str, Tuple[int, np.ndarray]]):
+    """Rebuild a pytree from restored shards using ``template`` structure."""
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
+    new_leaves = []
+    for path, leaf in leaves_with_path:
+        name = _path_str(path)
+        if name not in shards:
+            raise KeyError(f"missing shard {name}")
+        _step, arr = shards[name]
+        arr = np.asarray(arr)
+        new_leaves.append(jnp.asarray(arr.reshape(np.shape(leaf))).astype(
+            leaf.dtype if hasattr(leaf, "dtype") else arr.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -1,0 +1,11 @@
+"""Replicated-cluster layer: vnodes, delta replication, quorums, anti-entropy.
+
+Mirrors the paper's deployment model (§4): N vnodes each store a replica of
+each datum, service many clients, act concurrently.  A deterministic,
+seedable network simulation delivers messages with optional drop /
+duplicate / reorder so convergence properties can be tested exhaustively.
+"""
+from .sim import Network
+from .clusters import BigsetCluster, DeltaCluster, RiakSetCluster
+
+__all__ = ["Network", "BigsetCluster", "DeltaCluster", "RiakSetCluster"]

@@ -1,0 +1,132 @@
+"""Anti-entropy and handoff for bigset replicas.
+
+The paper (§6) defers its anti-entropy design to future work ("key processes
+we have developed including anti-entropy and hand-off").  We implement a
+correct protocol here, built from the paper's own primitives:
+
+A full sync of set S from replica B to replica A:
+
+1. A sends its set-clock ``SC_A`` to B.
+2. B replies with ``(SC_B, survivors_B, missing)`` where ``survivors_B`` is
+   a *clock digest* of the dots of B's surviving element-keys (contiguous
+   runs compress into the base VV, so in the common case this is
+   VV-sized), and ``missing`` is the list of surviving element-keys whose
+   dots ``SC_A`` has not seen.
+3. A applies:
+   * each missing key via Algorithm 2 (dot-seen check + append);
+   * **removal inference**: any local surviving key whose dot is seen by
+     ``SC_B`` but absent from ``survivors_B`` was removed at B — its dot
+     joins A's set-tombstone (B may have already *compacted* the removal
+     away; this rule needs no tombstone exchange, which is what makes
+     subtraction-after-compaction safe);
+   * ``SC_A := SC_A ⊔ SC_B`` — pre-empts superseded adds A never saw.
+4. A trims its tombstone: dots with no backing element-key are subtracted
+   (they can never discard anything again).
+
+Run in both directions, the protocol makes both replicas' read values equal
+(tested under drop/dup/reorder in tests/test_antientropy.py).  Handoff is
+the same machinery with the ``missing`` filter removed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+from ..core.bigset import BigsetVnode, InsertDelta
+from ..core.clock import Clock
+from ..core.dots import Dot
+
+
+@dataclass
+class SyncReply:
+    set_name: bytes
+    clock: Clock
+    survivors: Clock
+    missing: List[Tuple[bytes, Dot]]
+
+    def size_bytes(self) -> int:
+        return (
+            self.clock.size_bytes()
+            + self.survivors.size_bytes()
+            + sum(len(e) + 16 for e, _ in self.missing)
+        )
+
+
+def survivors_digest(vnode: BigsetVnode, set_name: bytes) -> Clock:
+    """Clock digest of the dots of all surviving element-keys."""
+    return Clock.zero().add_dots(d for _e, d in vnode.fold(set_name))
+
+
+def build_reply(
+    vnode: BigsetVnode, set_name: bytes, remote_clock: Clock
+) -> SyncReply:
+    survivors = Clock.zero()
+    missing: List[Tuple[bytes, Dot]] = []
+    dots = []
+    for element, dot in vnode.fold(set_name):
+        dots.append(dot)
+        if not remote_clock.seen(dot):
+            missing.append((element, dot))
+    survivors = survivors.add_dots(dots)
+    return SyncReply(set_name, vnode.read_clock(set_name), survivors, missing)
+
+
+def apply_reply(vnode: BigsetVnode, reply: SyncReply) -> int:
+    """Apply a sync reply at the requesting replica.  Returns #keys written."""
+    set_name = reply.set_name
+    written = 0
+    for element, dot in reply.missing:
+        if vnode.replica_insert(InsertDelta(set_name, element, dot)):
+            written += 1
+    # removal inference: local surviving keys removed remotely
+    removed: List[Dot] = []
+    for _element, dot in vnode.fold(set_name):
+        if reply.clock.seen(dot) and not reply.survivors.seen(dot):
+            removed.append(dot)
+    sc = vnode.read_clock(set_name).join(reply.clock)
+    ts = vnode.read_tombstone(set_name).add_dots(removed)
+    from ..core.bigset import clock_key, tombstone_key, _clock_to_bytes
+
+    vnode.store.put_batch(
+        [
+            (clock_key(set_name), _clock_to_bytes(sc)),
+            (tombstone_key(set_name), _clock_to_bytes(ts)),
+        ]
+    )
+    trim_tombstone(vnode, set_name)
+    return written
+
+
+def trim_tombstone(vnode: BigsetVnode, set_name: bytes) -> int:
+    """Subtract tombstone dots that no longer shadow any element-key."""
+    ts = vnode.read_tombstone(set_name)
+    if ts.is_zero():
+        return 0
+    backed = set()
+    from ..core.bigset import element_range, decode_element_key
+
+    lo, hi = element_range(set_name)
+    for k, _v in vnode.store.scan(lo, hi):
+        _s, _e, dot = decode_element_key(k)
+        if ts.seen(dot):
+            backed.add(dot)
+    unbacked = [d for d in ts.all_dots() if d not in backed]
+    if not unbacked:
+        return 0
+    ts = ts.subtract(unbacked)
+    from ..core.bigset import tombstone_key, _clock_to_bytes
+
+    vnode.store.put(tombstone_key(set_name), _clock_to_bytes(ts))
+    return len(unbacked)
+
+
+def sync(a: BigsetVnode, b: BigsetVnode, set_name: bytes) -> None:
+    """Bidirectional full sync of one set between two replicas."""
+    apply_reply(a, build_reply(b, set_name, a.read_clock(set_name)))
+    apply_reply(b, build_reply(a, set_name, b.read_clock(set_name)))
+
+
+def handoff(src: BigsetVnode, dst: BigsetVnode, set_name: bytes) -> int:
+    """Transfer a set to a new owner (ring change): sync with empty clock."""
+    reply = build_reply(src, set_name, Clock.zero())
+    return apply_reply(dst, reply)

@@ -1,0 +1,234 @@
+"""Three replicated-set clusters: Riak full-state, delta-replication, bigset.
+
+These are the paper's three contenders (Figure 1).  All share the same
+topology (N replicas per set, coordinator-forwarding, downstream
+replication) and the same storage substrate, so the only variable is the
+representation + replication strategy — exactly the comparison the paper
+makes.
+
+* :class:`RiakSetCluster` — §2: the ORSWOT serialized as one blob in a
+  riak-object; every write reads + rewrites the blob; replication ships the
+  full state; downstream merge on version-vector conflict.
+* :class:`DeltaCluster` — §3: delta mutators ship small deltas, but the
+  downstream replica still read-merge-writes the full blob.
+* :class:`BigsetCluster` — §4: decomposed keys, clock-only writes,
+  element-key deltas, dot-seen downstream apply.
+"""
+from __future__ import annotations
+
+import msgpack
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from ..core.bigset import BigsetVnode, InsertDelta, RemoveDelta
+from ..core.clock import Clock
+from ..core.delta_orswot import delta_add, delta_remove, join_delta
+from ..core.dots import Dot
+from ..core.orswot import Orswot
+from ..core.streaming import quorum_read
+from ..storage.lsm import LsmStore
+from .sim import Message, Network
+
+
+# --------------------------------------------------------------- orswot codec
+def orswot_to_bytes(s: Orswot) -> bytes:
+    return msgpack.packb(
+        {
+            "b": sorted(s.clock.base.items()),
+            "c": sorted((a, sorted(x)) for a, x in s.clock.cloud.items()),
+            "e": sorted(
+                (e, sorted((d.actor, d.counter) for d in ds))
+                for e, ds in s.entries.items()
+            ),
+        }
+    )
+
+
+def orswot_from_bytes(b: Optional[bytes]) -> Orswot:
+    if b is None:
+        return Orswot.new()
+    o = msgpack.unpackb(b, strict_map_key=False)
+    clock = Clock({a: n for a, n in o["b"]}, {a: frozenset(s) for a, s in o["c"]},
+                  _normalise=False)
+    entries = {
+        e: frozenset(Dot(a, c) for a, c in ds) for e, ds in o["e"]
+    }
+    return Orswot(clock, entries)
+
+
+class _ClusterBase:
+    """Shared topology: ``n_replicas`` vnodes all replicating every set."""
+
+    def __init__(self, n_replicas: int = 3, net: Optional[Network] = None,
+                 sync: bool = True):
+        self.n = n_replicas
+        self.net = net or Network()
+        self.sync = sync  # deliver replication traffic immediately
+        self.actors = [f"vnode{i}" for i in range(n_replicas)]
+
+    def _replicate(self, src: str, payload, size: int) -> None:
+        for a in self.actors:
+            if a != src:
+                self.net.send(src, a, payload, size)
+        if self.sync:
+            self.net.deliver_all(self._handle)
+
+    def settle(self) -> None:
+        self.net.deliver_all(self._handle)
+
+    def _handle(self, msg: Message) -> None:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def io_stats(self):
+        raise NotImplementedError
+
+
+class RiakSetCluster(_ClusterBase):
+    """Full-state ORSWOT-in-a-blob (Riak Sets, §2)."""
+
+    def __init__(self, n_replicas: int = 3, net: Optional[Network] = None,
+                 sync: bool = True):
+        super().__init__(n_replicas, net, sync)
+        self.stores: Dict[str, LsmStore] = {a: LsmStore() for a in self.actors}
+
+    def _key(self, set_name: bytes) -> bytes:
+        return b"riak_set/" + set_name
+
+    def _load(self, actor: str, set_name: bytes) -> Orswot:
+        return orswot_from_bytes(self.stores[actor].get(self._key(set_name)))
+
+    def _save(self, actor: str, set_name: bytes, s: Orswot) -> bytes:
+        blob = orswot_to_bytes(s)
+        self.stores[actor].put(self._key(set_name), blob)
+        return blob
+
+    def add(self, set_name: bytes, element: bytes, coordinator: int = 0) -> None:
+        actor = self.actors[coordinator]
+        s = self._load(actor, set_name)           # read whole set — O(n)
+        s = s.add(actor, element)
+        blob = self._save(actor, set_name, s)     # write whole set — O(n)
+        self._replicate(actor, ("state", set_name, blob), len(blob))
+
+    def remove(self, set_name: bytes, element: bytes, coordinator: int = 0) -> None:
+        actor = self.actors[coordinator]
+        s = self._load(actor, set_name)
+        ctx = s.context_of(element)
+        s = s.remove(element, ctx)
+        blob = self._save(actor, set_name, s)
+        self._replicate(actor, ("state", set_name, blob), len(blob))
+
+    def _handle(self, msg: Message) -> None:
+        _, set_name, blob = msg.payload
+        local = self._load(msg.dst, set_name)      # read whole set
+        incoming = orswot_from_bytes(blob)
+        if incoming.clock.descends(local.clock):
+            merged = incoming                      # supersedes: store directly
+        else:
+            merged = local.merge(incoming)         # conflict: full merge
+        self._save(msg.dst, set_name, merged)      # write whole set
+
+    def read(self, set_name: bytes, r: int = 1) -> Orswot:
+        acc = self._load(self.actors[0], set_name)
+        for a in self.actors[1:r]:
+            acc = acc.merge(self._load(a, set_name))
+        return acc
+
+    def value(self, set_name: bytes, r: int = 1):
+        return self.read(set_name, r).value()
+
+    def io_stats(self):
+        from ..storage.lsm import IoStats
+        agg = IoStats()
+        for st in self.stores.values():
+            for k in vars(agg):
+                setattr(agg, k, getattr(agg, k) + getattr(st.stats, k))
+        return agg
+
+
+class DeltaCluster(RiakSetCluster):
+    """Delta-replication ORSWOT (§3): small wire deltas, full-state disk IO."""
+
+    def add(self, set_name: bytes, element: bytes, coordinator: int = 0) -> None:
+        actor = self.actors[coordinator]
+        s = self._load(actor, set_name)            # still reads whole set
+        s, delta = delta_add(s, actor, element)
+        self._save(actor, set_name, s)             # still writes whole set
+        dblob = orswot_to_bytes(delta)
+        self._replicate(actor, ("delta", set_name, dblob), len(dblob))
+
+    def remove(self, set_name: bytes, element: bytes, coordinator: int = 0) -> None:
+        actor = self.actors[coordinator]
+        s = self._load(actor, set_name)
+        ctx = s.context_of(element)
+        s, delta = delta_remove(s, element, ctx)
+        self._save(actor, set_name, s)
+        dblob = orswot_to_bytes(delta)
+        self._replicate(actor, ("delta", set_name, dblob), len(dblob))
+
+    def _handle(self, msg: Message) -> None:
+        _, set_name, dblob = msg.payload
+        local = self._load(msg.dst, set_name)      # read whole set
+        delta = orswot_from_bytes(dblob)
+        merged = join_delta(local, delta)          # merge ALWAYS (§3)
+        self._save(msg.dst, set_name, merged)      # write whole set
+
+
+class BigsetCluster(_ClusterBase):
+    """Decomposed bigset cluster (§4)."""
+
+    def __init__(self, n_replicas: int = 3, net: Optional[Network] = None,
+                 sync: bool = True):
+        super().__init__(n_replicas, net, sync)
+        self.vnodes: Dict[str, BigsetVnode] = {
+            a: BigsetVnode(a) for a in self.actors
+        }
+
+    def add(self, set_name: bytes, element: bytes, coordinator: int = 0,
+            ctx: Iterable[Dot] = ()) -> None:
+        actor = self.actors[coordinator]
+        delta = self.vnodes[actor].coordinate_insert(set_name, element, ctx)
+        self._replicate(actor, delta, delta.size_bytes())
+
+    def remove(self, set_name: bytes, element: bytes, coordinator: int = 0,
+               ctx: Optional[Iterable[Dot]] = None) -> None:
+        """Observed-remove: ctx defaults to a local membership probe (§4.3.2
+        — "the client **must** provide a context for a remove")."""
+        actor = self.actors[coordinator]
+        vn = self.vnodes[actor]
+        if ctx is None:
+            _, ctx = vn.is_member(set_name, element)
+        ctx = tuple(ctx)
+        if not ctx:
+            return
+        delta = vn.coordinate_remove(set_name, ctx)
+        self._replicate(actor, delta, delta.size_bytes())
+
+    def _handle(self, msg: Message) -> None:
+        vn = self.vnodes[msg.dst]
+        if isinstance(msg.payload, InsertDelta):
+            vn.replica_insert(msg.payload)
+        elif isinstance(msg.payload, RemoveDelta):
+            vn.replica_remove(msg.payload)
+        else:  # anti-entropy and membership traffic uses callables
+            msg.payload(vn)
+
+    def read(self, set_name: bytes, r: int = 1) -> Orswot:
+        streams = []
+        for a in self.actors[:r]:
+            rs = self.vnodes[a].read(set_name)
+            streams.append((rs.clock, rs.entries()))
+        return quorum_read(streams)
+
+    def value(self, set_name: bytes, r: int = 1):
+        return self.read(set_name, r).value()
+
+    def compact_all(self) -> None:
+        for vn in self.vnodes.values():
+            vn.compact()
+
+    def io_stats(self):
+        from ..storage.lsm import IoStats
+        agg = IoStats()
+        for vn in self.vnodes.values():
+            for k in vars(agg):
+                setattr(agg, k, getattr(agg, k) + getattr(vn.store.stats, k))
+        return agg

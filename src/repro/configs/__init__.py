@@ -1,0 +1,6 @@
+from .base import ModelConfig
+from .registry import ARCHS, get_config, smoke_config
+from .shapes import SHAPES, input_specs, shape_cells
+
+__all__ = ["ModelConfig", "ARCHS", "get_config", "smoke_config", "SHAPES",
+           "input_specs", "shape_cells"]

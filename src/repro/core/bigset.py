@@ -1,0 +1,384 @@
+"""Bigset — the paper's decomposed delta CRDT Set (§4, Algorithms 1 & 2).
+
+A bigset vnode stores, per set, in one ordered KV store:
+
+* ``(set, KIND_CLOCK)``      -> serialized set-clock (BaseVV + DotCloud)
+* ``(set, KIND_TOMBSTONE)``  -> serialized set-tombstone
+* ``(set, KIND_ELEMENT, element, actor, counter)`` -> b""   (one per insert)
+
+Writes read **only the clocks** (O(causal metadata)), append element keys,
+and ship the element-key as the replication delta.  Removes are clock-only.
+Compaction (storage hook) discards element-keys covered by the tombstone and
+then *subtracts* those dots so the tombstone shrinks (§4.3.3).  Reads are a
+streaming fold over the element-key range in lexicographic element order,
+which also enables membership/range queries and the §4.4 streaming join.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, Iterable, Iterator, List, Optional, Tuple
+
+import msgpack
+
+from ..storage.keycodec import decode_key, encode_key
+from ..storage.lsm import LsmStore
+from .clock import Clock
+from .dots import ActorId, Dot
+from .orswot import Orswot
+
+KIND_CLOCK = 0
+KIND_TOMBSTONE = 1
+KIND_ELEMENT = 2
+
+
+# ------------------------------------------------------------------ codecs
+def _clock_to_bytes(c: Clock) -> bytes:
+    return msgpack.packb(
+        {
+            "b": sorted(c.base.items()),
+            "c": sorted((a, sorted(s)) for a, s in c.cloud.items()),
+        }
+    )
+
+
+def _clock_from_bytes(b: Optional[bytes]) -> Clock:
+    if b is None:
+        return Clock.zero()
+    o = msgpack.unpackb(b, strict_map_key=False)
+    return Clock(
+        {a: n for a, n in o["b"]},
+        {a: frozenset(s) for a, s in o["c"]},
+        _normalise=False,
+    )
+
+
+def clock_key(set_name: bytes) -> bytes:
+    return encode_key((set_name, KIND_CLOCK))
+
+def tombstone_key(set_name: bytes) -> bytes:
+    return encode_key((set_name, KIND_TOMBSTONE))
+
+def element_key(set_name: bytes, element: bytes, dot: Dot) -> bytes:
+    return encode_key((set_name, KIND_ELEMENT, element, dot.actor, dot.counter))
+
+def element_range(set_name: bytes) -> Tuple[bytes, bytes]:
+    lo = encode_key((set_name, KIND_ELEMENT))
+    hi = encode_key((set_name, KIND_ELEMENT + 1))
+    return lo, hi
+
+def decode_element_key(key: bytes) -> Tuple[bytes, bytes, Dot]:
+    set_name, kind, element, actor, counter = decode_key(key)
+    assert kind == KIND_ELEMENT
+    return set_name, element, Dot(actor.decode() if isinstance(actor, bytes) else actor, counter)
+
+
+# ------------------------------------------------------------------ deltas
+@dataclass(frozen=True)
+class InsertDelta:
+    """The replicated delta for an insert: the new element-key + op context.
+
+    ``value`` rides along with the key (empty for plain sets; checkpoint
+    shards store their tensor bytes here — the CRDT governs key liveness,
+    the value is immutable payload under that key).
+    """
+
+    set_name: bytes
+    element: bytes
+    dot: Dot
+    ctx: Tuple[Dot, ...] = ()
+    value: bytes = b""
+
+    def size_bytes(self) -> int:
+        return (len(self.set_name) + len(self.element) + 16
+                + 16 * len(self.ctx) + len(self.value))
+
+
+@dataclass(frozen=True)
+class RemoveDelta:
+    """The replicated delta for a remove: context dots only (clock-sized)."""
+
+    set_name: bytes
+    ctx: Tuple[Dot, ...]
+
+    def size_bytes(self) -> int:
+        return len(self.set_name) + 16 * len(self.ctx)
+
+
+Delta = InsertDelta  # union alias for typing docs; removes use RemoveDelta
+
+
+# ---------------------------------------------------------------- the vnode
+class BigsetVnode:
+    """One replica (vnode) hosting many bigsets in a single ordered store."""
+
+    def __init__(self, actor: ActorId, store: Optional[LsmStore] = None):
+        self.actor = actor
+        self.store = store or LsmStore()
+        self.store.compaction_filter = self._compaction_filter
+        self.store.on_discard = self._on_discard
+        self._discarded: Dict[bytes, List[Dot]] = {}
+        self._ts_cache: Dict[bytes, Clock] = {}  # valid only within one compaction
+
+    # ------------------------------------------------------------- clock io
+    def read_clock(self, set_name: bytes) -> Clock:
+        return _clock_from_bytes(self.store.get(clock_key(set_name)))
+
+    def read_tombstone(self, set_name: bytes) -> Clock:
+        return _clock_from_bytes(self.store.get(tombstone_key(set_name)))
+
+    # ----------------------------------------------------------- Algorithm 1
+    def coordinate_insert(
+        self, set_name: bytes, element: bytes, ctx: Iterable[Dot] = (),
+        value: bytes = b"",
+    ) -> InsertDelta:
+        """Coordinator-side insert (paper Algorithm 1).
+
+        Reads clocks only; context dots unseen by the set-clock are added to
+        it (so superseded adds can never materialise later), seen ones go to
+        the tombstone (so their element-keys compact away).  Mints a fresh
+        dot, atomically writes [set-clock, set-tombstone, element-key] and
+        returns the delta to send downstream.
+        """
+        ctx = tuple(ctx)
+        sc = self.read_clock(set_name)
+        ts = self.read_tombstone(set_name)
+        for dot in ctx:
+            if not sc.seen(dot):
+                sc = sc.add(dot)
+            else:
+                ts = ts.add(dot)
+        sc, dot = sc.increment(self.actor)
+        self.store.put_batch(
+            [
+                (clock_key(set_name), _clock_to_bytes(sc)),
+                (tombstone_key(set_name), _clock_to_bytes(ts)),
+                (element_key(set_name, element, dot), value),
+            ]
+        )
+        return InsertDelta(set_name, element, dot, ctx, value)
+
+    # ----------------------------------------------------------- Algorithm 2
+    def replica_insert(self, delta: InsertDelta) -> bool:
+        """Downstream delta apply (paper Algorithm 2).
+
+        Never merges full state: a dot-seen check, a clock add and an append.
+        Returns True if the element-key was written (False -> duplicate no-op).
+        """
+        set_name = delta.set_name
+        sc = self.read_clock(set_name)
+        ts = self.read_tombstone(set_name)
+        for dot in delta.ctx:
+            if not sc.seen(dot):
+                sc = sc.add(dot)
+            else:
+                ts = ts.add(dot)
+        if not sc.seen(delta.dot):
+            sc = sc.add(delta.dot)
+            self.store.put_batch(
+                [
+                    (clock_key(set_name), _clock_to_bytes(sc)),
+                    (tombstone_key(set_name), _clock_to_bytes(ts)),
+                    (element_key(set_name, delta.element, delta.dot), delta.value),
+                ]
+            )
+            return True
+        # seen: write clocks only if the ctx changed them
+        self.store.put_batch(
+            [
+                (clock_key(set_name), _clock_to_bytes(sc)),
+                (tombstone_key(set_name), _clock_to_bytes(ts)),
+            ]
+        )
+        return False
+
+    # -------------------------------------------------------------- removes
+    def coordinate_remove(
+        self, set_name: bytes, ctx: Iterable[Dot]
+    ) -> RemoveDelta:
+        """Remove (§4.3.2): clock-only write; the ctx **must** come from a read."""
+        ctx = tuple(ctx)
+        self._apply_remove(set_name, ctx)
+        return RemoveDelta(set_name, ctx)
+
+    def replica_remove(self, delta: RemoveDelta) -> None:
+        self._apply_remove(delta.set_name, delta.ctx)
+
+    def _apply_remove(self, set_name: bytes, ctx: Tuple[Dot, ...]) -> None:
+        sc = self.read_clock(set_name)
+        ts = self.read_tombstone(set_name)
+        for dot in ctx:
+            if sc.seen(dot):
+                ts = ts.add(dot)  # key exists (or existed): compact it away
+            else:
+                sc = sc.add(dot)  # unseen add: pre-empt it ever materialising
+        self.store.put_batch(
+            [
+                (clock_key(set_name), _clock_to_bytes(sc)),
+                (tombstone_key(set_name), _clock_to_bytes(ts)),
+            ]
+        )
+
+    # ---------------------------------------------------------------- reads
+    def fold(
+        self, set_name: bytes
+    ) -> Iterator[Tuple[bytes, Dot]]:
+        """Stream surviving (element, dot) pairs in lexicographic element order."""
+        for element, dot, _v in self.fold_values(set_name):
+            yield element, dot
+
+    def fold_values(
+        self, set_name: bytes
+    ) -> Iterator[Tuple[bytes, Dot, bytes]]:
+        """Fold including element values (checkpoint-shard payloads)."""
+        ts = self.read_tombstone(set_name)
+        lo, hi = element_range(set_name)
+        for k, v in self.store.scan(lo, hi):
+            _s, element, dot = decode_element_key(k)
+            if not ts.seen(dot):
+                yield element, dot, v
+
+    def read(self, set_name: bytes, batch_size: int = 10_000) -> "ReadStream":
+        """Streaming read (§4.4): batches of a partial ORSWOT, default 10k."""
+        return ReadStream(self, set_name, batch_size)
+
+    def read_full(self, set_name: bytes) -> Orswot:
+        """Materialise the whole set as a traditional ORSWOT (for tests/merge)."""
+        sc = self.read_clock(set_name)
+        entries: Dict[bytes, set] = {}
+        for element, dot in self.fold(set_name):
+            entries.setdefault(element, set()).add(dot)
+        return Orswot(sc, {e: frozenset(s) for e, s in entries.items()})
+
+    def value(self, set_name: bytes) -> FrozenSet[bytes]:
+        return frozenset(e for e, _ in self.fold(set_name))
+
+    def is_member(self, set_name: bytes, element: bytes) -> Tuple[bool, Tuple[Dot, ...]]:
+        """Membership query without reading the whole set (a seek, §4.4).
+
+        Returns (present, surviving dots) — the dots double as the causal
+        context for a subsequent remove or replacing add.
+        """
+        ts = self.read_tombstone(set_name)
+        lo = encode_key((set_name, KIND_ELEMENT, element))
+        hi = encode_key((set_name, KIND_ELEMENT, element + b"\x00"))
+        dots = []
+        for k, _v in self.store.scan(lo, hi):
+            _s, el, dot = decode_element_key(k)
+            if el == element and not ts.seen(dot):
+                dots.append(dot)
+        return (len(dots) > 0), tuple(sorted(dots))
+
+    def range_query(
+        self, set_name: bytes, start: bytes, limit: int
+    ) -> List[bytes]:
+        """Seek to ``start`` and stream up to ``limit`` members (pagination)."""
+        ts = self.read_tombstone(set_name)
+        lo = encode_key((set_name, KIND_ELEMENT, start))
+        _, hi = element_range(set_name)
+        out: List[bytes] = []
+        last = None
+        for k, _v in self.store.scan(lo, hi):
+            _s, el, dot = decode_element_key(k)
+            if ts.seen(dot):
+                continue
+            if el != last:
+                if len(out) == limit:
+                    break
+                out.append(el)
+                last = el
+        return out
+
+    def context_of(self, set_name: bytes, element: bytes) -> Tuple[Dot, ...]:
+        return self.is_member(set_name, element)[1]
+
+    # ----------------------------------------------------------- compaction
+    def _compaction_filter(self, key: bytes, value: bytes) -> bool:
+        """The modified-leveldb hook: drop element-keys seen by the tombstone."""
+        parts = decode_key(key)
+        if len(parts) < 3 or parts[1] != KIND_ELEMENT:
+            return False
+        set_name = parts[0]
+        ts = self._ts_cache.get(set_name)
+        if ts is None:
+            ts = _clock_from_bytes(self._peek(tombstone_key(set_name)))
+            self._ts_cache[set_name] = ts
+        dot = Dot(parts[3].decode() if isinstance(parts[3], bytes) else parts[3], parts[4])
+        return ts.seen(dot)
+
+    def _peek(self, key: bytes) -> Optional[bytes]:
+        # un-metered read used inside compaction (compaction volume is metered
+        # separately by the store)
+        v = self.store.memtable.get(key)
+        if v is None:
+            for run in self.store.runs:
+                v = run.get(key)
+                if v is not None:
+                    break
+        from ..storage.lsm import TOMBSTONE as _T
+
+        return None if v is None or v == _T else v
+
+    def _on_discard(self, key: bytes, value: bytes) -> None:
+        parts = decode_key(key)
+        set_name = parts[0]
+        dot = Dot(parts[3].decode() if isinstance(parts[3], bytes) else parts[3], parts[4])
+        self._discarded.setdefault(set_name, []).append(dot)
+
+    def compact(self) -> Dict[bytes, List[Dot]]:
+        """Run storage compaction; shrink tombstones by the discarded dots.
+
+        Returns {set_name: [discarded dots]} (§4.3.3: "Once a key is removed
+        the set-tombstone subtracts the deleted dot").
+        """
+        self._discarded = {}
+        self._ts_cache = {}
+        self.store.compact()
+        discarded = self._discarded
+        self._discarded = {}
+        self._ts_cache = {}
+        batch = []
+        for set_name, dots in discarded.items():
+            ts = self.read_tombstone(set_name)
+            ts = ts.subtract(dots)
+            batch.append((tombstone_key(set_name), _clock_to_bytes(ts)))
+        if batch:
+            self.store.put_batch(batch)
+        return discarded
+
+
+# ------------------------------------------------------------ streaming read
+class ReadStream:
+    """Batched streaming read of a bigset (§4.4), preserving element order.
+
+    Each batch is a *partial* ORSWOT (the set-clock plus a slice of entries)
+    suitable for the streaming quorum join in :mod:`repro.core.streaming`.
+    """
+
+    def __init__(self, vnode: BigsetVnode, set_name: bytes, batch_size: int):
+        self.clock = vnode.read_clock(set_name)
+        self._vnode = vnode
+        self._set = set_name
+        self._batch = batch_size
+
+    def batches(self) -> Iterator[List[Tuple[bytes, Tuple[Dot, ...]]]]:
+        out: List[Tuple[bytes, Tuple[Dot, ...]]] = []
+        cur_el: Optional[bytes] = None
+        cur_dots: List[Dot] = []
+        for element, dot in self._vnode.fold(self._set):
+            if element != cur_el:
+                if cur_el is not None:
+                    out.append((cur_el, tuple(cur_dots)))
+                    if len(out) >= self._batch:
+                        yield out
+                        out = []
+                cur_el, cur_dots = element, [dot]
+            else:
+                cur_dots.append(dot)
+        if cur_el is not None:
+            out.append((cur_el, tuple(cur_dots)))
+        if out:
+            yield out
+
+    def entries(self) -> Iterator[Tuple[bytes, Tuple[Dot, ...]]]:
+        for batch in self.batches():
+            yield from batch

@@ -1,0 +1,259 @@
+"""Logical clocks for bigset: ``{BaseVV(), DotCloud()}`` (paper §4.1).
+
+Both the *set-clock* and the *set-tombstone* are instances of this structure:
+
+* ``base`` — a version vector: ``actor -> max contiguous counter`` (events
+  ``1..base[actor]`` have all been seen).
+* ``cloud`` — the dot-cloud: ``actor -> set of counters`` seen *beyond* the
+  contiguous base (gaps exist below them).  Invariant: every counter in
+  ``cloud[a]`` is ``> base[a] + 1`` or not contiguous; after normalisation no
+  counter in the cloud extends the base.
+
+A replica **never** has an entry for itself in the DotCloud (paper §4.1): a
+coordinator only mints contiguous events for itself via :meth:`increment`.
+
+The clock is a join-semilattice under :meth:`join`; :meth:`seen` is the
+membership test used by Algorithms 1 & 2 and by compaction.  The tombstone
+additionally *shrinks* via :meth:`subtract` once compaction discards keys
+(paper §4.3.3) — subtraction is safe for the tombstone because it is a
+record of *pending* removals, not a grow-only summary.
+
+The implementation is purely functional: every operation returns a new clock.
+"""
+from __future__ import annotations
+
+from typing import Dict, FrozenSet, Iterable, Mapping, Tuple
+
+from .dots import ActorId, Dot, as_dot
+
+_EMPTY: "Clock | None" = None
+
+
+class Clock:
+    __slots__ = ("base", "cloud")
+
+    def __init__(
+        self,
+        base: Mapping[ActorId, int] | None = None,
+        cloud: Mapping[ActorId, FrozenSet[int]] | None = None,
+        _normalise: bool = True,
+    ):
+        b: Dict[ActorId, int] = dict(base or {})
+        c: Dict[ActorId, FrozenSet[int]] = {
+            a: frozenset(s) for a, s in (cloud or {}).items() if s
+        }
+        if _normalise:
+            b, c = _normalise_parts(b, c)
+        self.base: Mapping[ActorId, int] = b
+        self.cloud: Mapping[ActorId, FrozenSet[int]] = c
+
+    # ---------------------------------------------------------------- basics
+    @staticmethod
+    def zero() -> "Clock":
+        global _EMPTY
+        if _EMPTY is None:
+            _EMPTY = Clock({}, {}, _normalise=False)
+        return _EMPTY
+
+    def is_zero(self) -> bool:
+        return not self.base and not self.cloud
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, Clock):
+            return NotImplemented
+        return self.base == other.base and self.cloud == other.cloud
+
+    def __hash__(self) -> int:
+        return hash(
+            (
+                tuple(sorted(self.base.items())),
+                tuple(sorted((a, tuple(sorted(s))) for a, s in self.cloud.items())),
+            )
+        )
+
+    def __repr__(self) -> str:
+        cloud = {a: sorted(s) for a, s in sorted(self.cloud.items())}
+        return f"Clock(base={dict(sorted(self.base.items()))}, cloud={cloud})"
+
+    # ----------------------------------------------------------------- seen
+    def seen(self, dot: Dot) -> bool:
+        """Has this clock observed ``dot``?  (Algorithms 1 & 2's test.)"""
+        dot = as_dot(dot)
+        if dot.counter <= self.base.get(dot.actor, 0):
+            return True
+        return dot.counter in self.cloud.get(dot.actor, frozenset())
+
+    def seen_all(self, dots: Iterable[Dot]) -> bool:
+        return all(self.seen(d) for d in dots)
+
+    # ----------------------------------------------------------- coordinator
+    def increment(self, actor: ActorId) -> Tuple["Clock", Dot]:
+        """Mint the next contiguous event for ``actor`` (coordinator-side).
+
+        Returns ``(clock', dot)`` where ``dot`` is the freshly minted event.
+        Only ever called by a replica for *itself*, hence it extends the base
+        VV and never touches the cloud (a replica has no cloud entry for
+        itself, §4.1).
+        """
+        base = dict(self.base)
+        nxt = base.get(actor, 0) + 1
+        if actor in self.cloud:
+            # §4.1 invariant: "A replica will never have an entry for itself
+            # in the DotCloud" — minting below a gap would reuse/skip events.
+            raise ValueError(f"actor {actor!r} has its own dots in the cloud")
+        base[actor] = nxt
+        return Clock(base, self.cloud, _normalise=False), Dot(actor, nxt)
+
+    def latest_dot(self, actor: ActorId) -> Dot:
+        return Dot(actor, self.base.get(actor, 0))
+
+    # ------------------------------------------------------------------ add
+    def add(self, dot: Dot) -> "Clock":
+        """Add one observed event (replica-side delta apply)."""
+        dot = as_dot(dot)
+        if self.seen(dot):
+            return self
+        base = dict(self.base)
+        cloud = {a: set(s) for a, s in self.cloud.items()}
+        cloud.setdefault(dot.actor, set()).add(dot.counter)
+        b, c = _normalise_parts(base, cloud)
+        return Clock(b, c, _normalise=False)
+
+    def add_dots(self, dots: Iterable[Dot]) -> "Clock":
+        base = dict(self.base)
+        cloud = {a: set(s) for a, s in self.cloud.items()}
+        changed = False
+        for d in dots:
+            d = as_dot(d)
+            if d.counter <= base.get(d.actor, 0):
+                continue
+            s = cloud.setdefault(d.actor, set())
+            if d.counter not in s:
+                s.add(d.counter)
+                changed = True
+        if not changed:
+            return self
+        b, c = _normalise_parts(base, cloud)
+        return Clock(b, c, _normalise=False)
+
+    # ----------------------------------------------------------------- join
+    def join(self, other: "Clock") -> "Clock":
+        """Least upper bound of two clocks (semilattice join)."""
+        if self is other:
+            return self
+        base: Dict[ActorId, int] = dict(self.base)
+        for a, n in other.base.items():
+            if n > base.get(a, 0):
+                base[a] = n
+        cloud: Dict[ActorId, set] = {a: set(s) for a, s in self.cloud.items()}
+        for a, s in other.cloud.items():
+            cloud.setdefault(a, set()).update(s)
+        b, c = _normalise_parts(base, cloud)
+        return Clock(b, c, _normalise=False)
+
+    # ------------------------------------------------------------- subtract
+    def subtract(self, dots: Iterable[Dot]) -> "Clock":
+        """Remove ``dots`` from this clock (tombstone trimming, §4.3.3).
+
+        Only meaningful for the set-tombstone: after compaction discards an
+        element-key, its dot is subtracted so the tombstone stays minimal.
+        Subtracting a dot below the base fragments the base into cloud
+        entries for the retained counters.
+        """
+        by_actor: Dict[ActorId, set] = {}
+        for d in dots:
+            d = as_dot(d)
+            by_actor.setdefault(d.actor, set()).add(d.counter)
+        if not by_actor:
+            return self
+        base = dict(self.base)
+        cloud: Dict[ActorId, set] = {a: set(s) for a, s in self.cloud.items()}
+        for a, gone in by_actor.items():
+            b = base.get(a, 0)
+            keep_low = min(gone)
+            if keep_low <= b:
+                # fragment base: retain 1..keep_low-1 contiguously, the rest
+                # (minus `gone`) as cloud entries
+                retained = set(range(keep_low, b + 1)) - gone
+                base[a] = keep_low - 1
+                if base[a] == 0:
+                    base.pop(a, None)
+                cloud.setdefault(a, set()).update(retained)
+            if a in cloud:
+                cloud[a] -= gone
+                if not cloud[a]:
+                    del cloud[a]
+        b2, c2 = _normalise_parts(base, cloud)
+        return Clock(b2, c2, _normalise=False)
+
+    # ------------------------------------------------------------- ordering
+    def descends(self, other: "Clock") -> bool:
+        """True iff self has seen every event other has (self >= other)."""
+        for a, n in other.base.items():
+            if n > self.base.get(a, 0):
+                # other's base may still be covered by self's cloud
+                cl = self.cloud.get(a, frozenset())
+                lo = self.base.get(a, 0)
+                if not all(k in cl for k in range(lo + 1, n + 1)):
+                    return False
+        for a, s in other.cloud.items():
+            lo = self.base.get(a, 0)
+            cl = self.cloud.get(a, frozenset())
+            for k in s:
+                if k > lo and k not in cl:
+                    return False
+        return True
+
+    def dominates(self, other: "Clock") -> bool:
+        return self.descends(other) and self != other
+
+    # ---------------------------------------------------------------- dots
+    def all_dots(self) -> Tuple[Dot, ...]:
+        """Every dot this clock has seen (O(total events) — for tests/small clocks)."""
+        out = []
+        for a, n in self.base.items():
+            out.extend(Dot(a, k) for k in range(1, n + 1))
+        for a, s in self.cloud.items():
+            out.extend(Dot(a, k) for k in sorted(s))
+        return tuple(sorted(out))
+
+    def actors(self) -> FrozenSet[ActorId]:
+        return frozenset(self.base) | frozenset(self.cloud)
+
+    def size_bytes(self) -> int:
+        """Approximate serialized size — the metric the paper optimises for."""
+        n_entries = len(self.base) + sum(len(s) for s in self.cloud.values())
+        return 16 * n_entries  # (actor, counter) ~ two 8-byte words each
+
+    # ---------------------------------------------------------- (de)coding
+    def to_obj(self):
+        return {
+            "base": sorted(self.base.items()),
+            "cloud": sorted((a, sorted(s)) for a, s in self.cloud.items()),
+        }
+
+    @staticmethod
+    def from_obj(o) -> "Clock":
+        return Clock(dict(o["base"]), {a: frozenset(s) for a, s in o["cloud"]})
+
+
+def _normalise_parts(
+    base: Dict[ActorId, int], cloud: Dict[ActorId, Iterable[int]]
+) -> Tuple[Dict[ActorId, int], Dict[ActorId, FrozenSet[int]]]:
+    """Compress cloud counters contiguous with the base into the base VV."""
+    out_cloud: Dict[ActorId, FrozenSet[int]] = {}
+    for a, s in cloud.items():
+        s = set(s)
+        b = base.get(a, 0)
+        s = {k for k in s if k > b}
+        while b + 1 in s:
+            b += 1
+            s.remove(b)
+        if b:
+            base[a] = b
+        if s:
+            out_cloud[a] = frozenset(s)
+    # drop zero entries in base
+    for a in [a for a, n in base.items() if n <= 0]:
+        del base[a]
+    return base, out_cloud

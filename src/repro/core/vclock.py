@@ -1,0 +1,230 @@
+"""Dense JAX logical clocks — the TPU-native form of BaseVV + DotCloud.
+
+The paper's clocks are sparse maps; their hot operations (dot-seen filtering
+of element-key streams, clock joins, tombstone subtraction) are the write
+and read path of every bigset op.  On TPU we hold a *dense* clock per actor
+universe:
+
+* ``origin : int32[A]``   — per-actor contiguous horizon: every event
+  ``1..origin[a]`` has been seen (the BaseVV, epoch-aligned),
+* ``bits : uint32[A, W]`` — a bitmap windowing events
+  ``origin[a]+1 .. origin[a]+32·W`` (the DotCloud).
+
+With a *shared origin* (the framework re-bases clocks at checkpoint epochs)
+the lattice ops become data-parallel bitwise kernels:
+
+    join      = bitwise OR            (set-clock ⊔ delta)
+    subtract  = AND NOT               (tombstone shrink, §4.3.3)
+    seen      = counter ≤ origin  OR  bit-test        (Algorithms 1 & 2)
+    compress  = count contiguous prefix of ones → fold into origin
+
+``dots_seen`` — the per-element-key filter applied millions of times during
+a read fold — is the Pallas kernel in :mod:`repro.kernels.dot_seen`; the
+bit-gather is expressed as one-hot matmuls so it runs on the MXU instead of
+a scatter/gather unit TPUs don't have.  This module is the pure-jnp oracle
+(``ref``) for those kernels and the conversion layer to/from the sparse
+:class:`repro.core.clock.Clock`.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .clock import Clock
+from .dots import Dot
+
+
+class DenseClock(NamedTuple):
+    origin: jax.Array  # int32[A]
+    bits: jax.Array    # uint32[A, W]
+
+    @property
+    def n_actors(self) -> int:
+        return self.origin.shape[0]
+
+    @property
+    def window_events(self) -> int:
+        return self.bits.shape[1] * 32
+
+
+def zero(n_actors: int, n_words: int) -> DenseClock:
+    return DenseClock(
+        jnp.zeros((n_actors,), jnp.int32),
+        jnp.zeros((n_actors, n_words), jnp.uint32),
+    )
+
+
+# ------------------------------------------------------------------- seen
+def dots_seen(clock: DenseClock, actors: jax.Array, counters: jax.Array) -> jax.Array:
+    """Vectorised Algorithm-1/2 membership test.
+
+    actors : int32[N] (indices into the actor universe)
+    counters : int32[N] (event numbers, 1-based)
+    returns bool[N]
+    """
+    origin = clock.origin[actors]                      # [N]
+    below = counters <= origin
+    rel = counters - origin - 1                        # 0-based window offset
+    word = jnp.clip(rel // 32, 0, clock.bits.shape[1] - 1)
+    bit = (rel % 32).astype(jnp.uint32)
+    words = clock.bits[actors, word]                   # [N]
+    in_window = (rel >= 0) & (rel < clock.window_events)
+    hit = ((words >> bit) & jnp.uint32(1)).astype(bool)
+    return below | (in_window & hit)
+
+
+# ------------------------------------------------------------------ lattice
+def _require_aligned(a: DenseClock, b: DenseClock) -> None:
+    if a.origin.shape != b.origin.shape or a.bits.shape != b.bits.shape:
+        raise ValueError("dense clocks must share actor universe and window")
+
+
+def join(a: DenseClock, b: DenseClock) -> DenseClock:
+    """⊔ of two *origin-aligned* dense clocks (bitwise OR)."""
+    _require_aligned(a, b)
+    return DenseClock(jnp.maximum(a.origin, b.origin), a.bits | b.bits)
+
+
+def subtract(a: DenseClock, b: DenseClock) -> DenseClock:
+    """Remove b's window events from a (tombstone shrink).  Origins must
+    match: events at/below the shared origin cannot be subtracted densely."""
+    _require_aligned(a, b)
+    return DenseClock(a.origin, a.bits & ~b.bits)
+
+
+def add_dots(clock: DenseClock, actors: jax.Array, counters: jax.Array) -> DenseClock:
+    """Scatter-OR events into the window (delta apply).
+
+    XLA has no scatter-OR, and scatter-set loses bits when several dots land
+    in the same word.  OR is emulated exactly with 32 per-bit scatter-max
+    ops on 0/1 planes (duplicate dots are idempotent under max).
+    """
+    A, W = clock.bits.shape
+    rel = counters - clock.origin[actors] - 1
+    word = rel // 32
+    bit = rel % 32
+    ok = (rel >= 0) & (rel < clock.window_events)
+    flat = jnp.where(ok, actors * W + word, A * W)  # out-of-range -> dropped
+    bits_flat = clock.bits.reshape(-1)
+    for b in range(32):
+        plane = ((bits_flat >> jnp.uint32(b)) & jnp.uint32(1)).astype(jnp.int32)
+        idx_b = jnp.where(bit == b, flat, A * W)
+        plane = plane.at[idx_b].max(1, mode="drop")
+        if b == 0:
+            acc = plane.astype(jnp.uint32)
+        else:
+            acc = acc | (plane.astype(jnp.uint32) << jnp.uint32(b))
+    return DenseClock(clock.origin, acc.reshape(A, W))
+
+
+def compress(clock: DenseClock) -> DenseClock:
+    """Fold the contiguous all-ones prefix of each window into the origin.
+
+    Mirrors :func:`repro.core.clock._normalise_parts`: events contiguous
+    with the base VV leave the dot cloud.
+    """
+    A, W = clock.bits.shape
+    full = jnp.uint32(0xFFFFFFFF)
+    is_full = clock.bits == full                        # [A, W]
+    # number of leading full words per actor
+    prefix_full = jnp.cumprod(is_full.astype(jnp.int32), axis=1)  # 1 while full
+    n_full_words = prefix_full.sum(axis=1)              # [A]
+    # bits in the first non-full word: count trailing ones
+    first_partial = jnp.take_along_axis(
+        clock.bits, jnp.minimum(n_full_words, W - 1)[:, None], axis=1
+    )[:, 0]
+    # trailing ones of w = ctz(~w)
+    inv = ~first_partial
+    tz = _ctz32(inv)
+    extra = jnp.where(n_full_words < W, tz, 0)
+    advance = n_full_words * 32 + extra                  # events to absorb
+    new_origin = clock.origin + advance.astype(jnp.int32)
+    # shift windows left by `advance` bits (per actor) — done in numpy-free
+    # jnp via per-actor roll on words + bit shifts
+    new_bits = _shift_left_bits(clock.bits, advance)
+    return DenseClock(new_origin, new_bits)
+
+
+def _ctz32(x: jax.Array) -> jax.Array:
+    """Count trailing zeros of uint32 (32 for x == 0)."""
+    x = x.astype(jnp.uint32)
+    lsb = x & (~x + jnp.uint32(1))
+    f = lsb.astype(jnp.float32)
+    e = jnp.where(lsb == 0, jnp.int32(32), (jnp.log2(f)).astype(jnp.int32))
+    return e
+
+
+def _shift_left_bits(bits: jax.Array, n: jax.Array) -> jax.Array:
+    """Per-row left-shift of a multi-word little-endian bitfield by n bits."""
+    A, W = bits.shape
+    word_shift = (n // 32)[:, None]                      # [A,1]
+    bit_shift = (n % 32).astype(jnp.uint32)[:, None]     # [A,1]
+    idx = jnp.arange(W)[None, :] + word_shift            # source word index
+    lo = jnp.where(idx < W, jnp.take_along_axis(
+        bits, jnp.minimum(idx, W - 1), axis=1), jnp.uint32(0))
+    idx2 = idx + 1
+    hi = jnp.where(idx2 < W, jnp.take_along_axis(
+        bits, jnp.minimum(idx2, W - 1), axis=1), jnp.uint32(0))
+    shifted = jnp.where(
+        bit_shift == 0,
+        lo,
+        (lo >> bit_shift) | (hi << (jnp.uint32(32) - bit_shift)),
+    )
+    return shifted
+
+
+def base_vv(clock: DenseClock) -> jax.Array:
+    """Effective version vector (origin + contiguous window prefix)."""
+    return compress(clock).origin
+
+
+# ------------------------------------------------------------- conversions
+def from_clock(
+    clock: Clock, actor_index: Dict[object, int], n_actors: int, n_words: int,
+    origin: np.ndarray | None = None,
+) -> DenseClock:
+    """Sparse → dense.  ``origin`` defaults to zeros (epoch start)."""
+    og = np.zeros((n_actors,), np.int32) if origin is None else np.asarray(origin, np.int32).copy()
+    bits = np.zeros((n_actors, n_words), np.uint32)
+    for a, n in clock.base.items():
+        i = actor_index[a]
+        for c in range(og[i] + 1, n + 1):
+            rel = c - og[i] - 1
+            if rel >= n_words * 32:
+                raise ValueError("window too small for clock base")
+            bits[i, rel // 32] |= np.uint32(1) << np.uint32(rel % 32)
+    for a, s in clock.cloud.items():
+        i = actor_index[a]
+        for c in s:
+            rel = c - og[i] - 1
+            if rel < 0:
+                continue
+            if rel >= n_words * 32:
+                raise ValueError("window too small for dot cloud")
+            bits[i, rel // 32] |= np.uint32(1) << np.uint32(rel % 32)
+    return DenseClock(jnp.asarray(og), jnp.asarray(bits))
+
+
+def to_clock(clock: DenseClock, actors: Sequence[object]) -> Clock:
+    """Dense → sparse (normalised BaseVV + DotCloud)."""
+    og = np.asarray(clock.origin)
+    bits = np.asarray(clock.bits)
+    base: Dict[object, int] = {}
+    cloud: Dict[object, set] = {}
+    A, W = bits.shape
+    for i, a in enumerate(actors):
+        if og[i]:
+            base[a] = int(og[i])
+        s = set()
+        for w in range(W):
+            v = int(bits[i, w])
+            while v:
+                b = (v & -v).bit_length() - 1
+                s.add(int(og[i]) + w * 32 + b + 1)
+                v &= v - 1
+        if s:
+            cloud[a] = frozenset(s)
+    return Clock(base, cloud)

@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Paper-technique kernels (the bigset causal-metadata plane):
+* ``dot_seen``    - batched dot-membership filter (read fold / delta dedup)
+* ``clock_ops``   - clock-lattice join / subtract / popcount bitmaps
+
+Model-plane kernels (the assigned-architecture hot spots):
+* ``flash_attention``  - blocked prefill attention (causal/SWA, GQA)
+* ``decode_attention`` - flash-decode over long KV caches
+* ``mamba_scan``       - chunked selective scan (SSM archs)
+
+Each subpackage is ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd wrapper with pallas/ref dispatch) and ``ref.py`` (pure-jnp oracle).
+All kernels validate against their oracle in ``interpret=True`` across
+shape/dtype sweeps in tests/test_kernels.py.
+"""
+from .dot_seen import dot_seen
+from .flash_attention import flash_attention
+from .decode_attention import decode_attention
+from .mamba_scan import mamba_scan, mamba_step
+from . import clock_ops
+
+__all__ = ["dot_seen", "flash_attention", "decode_attention", "mamba_scan",
+           "mamba_step", "clock_ops"]

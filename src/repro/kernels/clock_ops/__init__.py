@@ -1,0 +1,3 @@
+from .ops import join, popcount, subtract
+
+__all__ = ["join", "subtract", "popcount"]

@@ -1,0 +1,86 @@
+"""Pallas TPU kernels for clock-lattice bitwise ops.
+
+Pure VPU work: OR / AND-NOT / popcount over ``uint32[A, W]`` bitmap tiles.
+Tiled (block_a × block_w) so arbitrarily large actor universes / windows
+stream through VMEM; for the framework's clocks (A ≤ 512 hosts, W ≤ 2048
+words ≈ 64k events) a single tile suffices.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _join_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] | b_ref[...]
+
+
+def _subtract_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] & ~b_ref[...]
+
+
+def _popcount_kernel(a_ref, o_ref):
+    x = a_ref[...]
+    x = x - ((x >> jnp.uint32(1)) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> jnp.uint32(2)) & jnp.uint32(0x33333333))
+    x = (x + (x >> jnp.uint32(4))) & jnp.uint32(0x0F0F0F0F)
+    x = (x * jnp.uint32(0x01010101)) >> jnp.uint32(24)
+    o_ref[...] += x.astype(jnp.int32).sum(axis=-1)
+
+
+def _tiles(n: int, b: int) -> int:
+    return (n + b - 1) // b
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kernel", "block_a", "block_w", "interpret"))
+def _binary_op(kernel, a: jax.Array, b: jax.Array, *, block_a: int = 8,
+               block_w: int = 512, interpret: bool = True) -> jax.Array:
+    A, W = a.shape
+    ba, bw = min(block_a, A), min(block_w, W)
+    grid = (_tiles(A, ba), _tiles(W, bw))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ba, bw), lambda i, j: (i, j)),
+            pl.BlockSpec((ba, bw), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((ba, bw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((A, W), jnp.uint32),
+        interpret=interpret,
+    )(a, b)
+
+
+def join_pallas(a, b, **kw):
+    return _binary_op(_join_kernel, a, b, **kw)
+
+
+def subtract_pallas(a, b, **kw):
+    return _binary_op(_subtract_kernel, a, b, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("block_a", "block_w", "interpret"))
+def popcount_pallas(a: jax.Array, *, block_a: int = 8, block_w: int = 512,
+                    interpret: bool = True) -> jax.Array:
+    A, W = a.shape
+    ba, bw = min(block_a, A), min(block_w, W)
+
+    def kernel(a_ref, o_ref):
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+        _popcount_kernel(a_ref, o_ref)
+
+    grid = (_tiles(A, ba), _tiles(W, bw))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ba, bw), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((ba,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((A,), jnp.int32),
+        interpret=interpret,
+    )(a)

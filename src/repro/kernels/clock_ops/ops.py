@@ -1,0 +1,40 @@
+"""Jit'd wrappers for clock-lattice ops with pallas/ref dispatch."""
+from __future__ import annotations
+
+import jax
+
+from ...core.vclock import DenseClock
+from . import kernel as K
+from . import ref as R
+
+
+def _dispatch(pallas_fn, ref_fn, use_pallas: bool, interpret: bool | None):
+    if not use_pallas:
+        return ref_fn
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    def run(*args):
+        return pallas_fn(*args, interpret=interpret)
+
+    return run
+
+
+def join(a: DenseClock, b: DenseClock, *, use_pallas: bool = False,
+         interpret: bool | None = None) -> DenseClock:
+    import jax.numpy as jnp
+
+    bits = _dispatch(K.join_pallas, R.join_ref, use_pallas, interpret)(a.bits, b.bits)
+    return DenseClock(jnp.maximum(a.origin, b.origin), bits)
+
+
+def subtract(a: DenseClock, b: DenseClock, *, use_pallas: bool = False,
+             interpret: bool | None = None) -> DenseClock:
+    bits = _dispatch(K.subtract_pallas, R.subtract_ref, use_pallas, interpret)(
+        a.bits, b.bits)
+    return DenseClock(a.origin, bits)
+
+
+def popcount(a: DenseClock, *, use_pallas: bool = False,
+             interpret: bool | None = None) -> jax.Array:
+    return _dispatch(K.popcount_pallas, R.popcount_ref, use_pallas, interpret)(a.bits)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the bitwise clock-lattice kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def join_ref(a_bits: jax.Array, b_bits: jax.Array) -> jax.Array:
+    """Window union: set-clock ⊔ delta-clock (uint32[A, W])."""
+    return a_bits | b_bits
+
+
+def subtract_ref(a_bits: jax.Array, b_bits: jax.Array) -> jax.Array:
+    """Tombstone shrink (§4.3.3): a AND NOT b."""
+    return a_bits & ~b_bits
+
+
+def popcount_ref(bits: jax.Array) -> jax.Array:
+    """Events per actor in the window — clock-density stats (int32[A])."""
+    x = bits
+    x = x - ((x >> jnp.uint32(1)) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> jnp.uint32(2)) & jnp.uint32(0x33333333))
+    x = (x + (x >> jnp.uint32(4))) & jnp.uint32(0x0F0F0F0F)
+    x = (x * jnp.uint32(0x01010101)) >> jnp.uint32(24)
+    return x.astype(jnp.int32).sum(axis=-1)

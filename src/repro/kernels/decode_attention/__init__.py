@@ -1,0 +1,5 @@
+from .ops import decode_attention
+from .kernel import decode_attention_pallas
+from .ref import decode_attention_ref
+
+__all__ = ["decode_attention", "decode_attention_pallas", "decode_attention_ref"]

@@ -1,0 +1,133 @@
+"""Pallas TPU flash-decode: one query token vs a long KV cache.
+
+decode_32k / long_500k lower this step.  The MXU wants ≥8-row operands, so
+the q-head *group* of a GQA kv head forms the row block (padded to the
+sublane minimum): for each (batch, kv-head) the kernel streams KV tiles
+[BKV, D] from HBM through VMEM, carrying online-softmax stats — the
+arithmetic-intensity profile is exactly "read the cache once", which is the
+HBM-bandwidth roofline decode lives on.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                   *, scale: float, window: int | None, block_kv: int,
+                   group_pad: int):
+    ikv = pl.program_id(1)
+    n_kv = pl.num_programs(1)
+
+    @pl.when(ikv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cache_len = len_ref[0]
+    kv_start = ikv * block_kv
+    lo_bound = 0 if window is None else cache_len - window
+
+    @pl.when(jnp.logical_and(kv_start < cache_len,
+                             kv_start + block_kv > lo_bound))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)      # [G, D]
+        k = k_ref[0, 0].astype(jnp.float32)      # [BKV, D]
+        v = v_ref[0, 0].astype(jnp.float32)      # [BKV, D]
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # [G, BKV]
+        pos = kv_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        valid = pos < cache_len
+        if window is not None:
+            valid &= pos >= cache_len - window
+        logits = jnp.where(valid, logits, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+        p = jnp.where(valid, jnp.exp(logits - m_new[:, None]), 0.0)
+        alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ikv == n_kv - 1)
+    def _finalize():
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "scale", "block_kv", "interpret"),
+)
+def decode_attention_pallas(
+    q: jax.Array,          # [B, Hq, D]
+    k_cache: jax.Array,    # [B, Hkv, S, D]
+    v_cache: jax.Array,    # [B, Hkv, S, D]
+    cache_len: jax.Array,  # int32[B]
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+    block_kv: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    group_pad = max(8, group)  # sublane minimum
+    if scale is None:
+        scale = D ** -0.5
+    block_kv = min(block_kv, S)
+    assert S % block_kv == 0
+
+    # [B, Hkv, G, D] with the group padded to the sublane minimum
+    qg = q.reshape(B, Hkv, group, D)
+    if group_pad != group:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, group_pad - group), (0, 0)))
+
+    grid = (B * Hkv, S // block_kv)
+
+    def q_index(h, ikv):
+        return (h // Hkv, h % Hkv, 0, 0)
+
+    def kv_index(h, ikv):
+        return (h // Hkv, h % Hkv, ikv, 0)
+
+    def len_index(h, ikv):
+        return (h // Hkv,)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, window=window, block_kv=block_kv,
+        group_pad=group_pad)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), len_index),
+            pl.BlockSpec((1, 1, group_pad, D), q_index),
+            pl.BlockSpec((1, 1, block_kv, D), kv_index),
+            pl.BlockSpec((1, 1, block_kv, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group_pad, D), q_index),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group_pad, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group_pad, D), jnp.float32),
+            pltpu.VMEM((group_pad,), jnp.float32),
+            pltpu.VMEM((group_pad,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), qg, k_cache, v_cache)
+    return out[:, :, :group, :].reshape(B, Hq, D)

@@ -1,0 +1,28 @@
+"""Jit'd decode-attention entry point with pallas/ref dispatch."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import decode_attention_pallas
+from .ref import decode_attention_ref
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if use_pallas:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return decode_attention_pallas(
+            q, k_cache, v_cache, cache_len, window=window, scale=scale,
+            interpret=interpret)
+    return decode_attention_ref(
+        q, k_cache, v_cache, cache_len, window=window, scale=scale)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(
+    q: jax.Array,          # [B, Hq, D]      (one new token per sequence)
+    k_cache: jax.Array,    # [B, Hkv, S, D]
+    v_cache: jax.Array,    # [B, Hkv, S, D]
+    cache_len: jax.Array,  # int32[B]        (valid prefix length per seq)
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:            # [B, Hq, D]
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    kq = jnp.repeat(k_cache, group, axis=1)
+    vq = jnp.repeat(v_cache, group, axis=1)
+    logits = jnp.einsum(
+        "bhd,bhsd->bhs", q.astype(jnp.float32), kq.astype(jnp.float32)
+    ) * scale
+    pos = jnp.arange(S)[None, :]                       # [1, S]
+    valid = pos < cache_len[:, None]                   # [B, S]
+    if window is not None:
+        valid &= pos >= (cache_len[:, None] - window)
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhs,bhsd->bhd", probs, vq.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,5 @@
+from .ops import dot_seen
+from .kernel import dot_seen_pallas
+from .ref import dot_seen_ref
+
+__all__ = ["dot_seen", "dot_seen_pallas", "dot_seen_ref"]

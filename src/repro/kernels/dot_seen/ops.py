@@ -1,0 +1,34 @@
+"""Jit'd public wrapper for the dot-seen kernel.
+
+Dispatch: Pallas (interpret on CPU, compiled on TPU) or the pure-jnp
+reference.  The bigset read fold and delta-batch dedup call this with the
+tombstone / set-clock in dense form.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.vclock import DenseClock
+from .kernel import dot_seen_pallas
+from .ref import dot_seen_ref
+
+
+def dot_seen(
+    clock: DenseClock,
+    actors: jax.Array,
+    counters: jax.Array,
+    *,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """bool[N] — which dots has ``clock`` seen?"""
+    actors = jnp.asarray(actors, jnp.int32)
+    counters = jnp.asarray(counters, jnp.int32)
+    if use_pallas:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return dot_seen_pallas(
+            clock.origin, clock.bits, actors, counters, interpret=interpret
+        )
+    return dot_seen_ref(clock.origin, clock.bits, actors, counters)

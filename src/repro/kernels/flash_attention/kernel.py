@@ -1,0 +1,153 @@
+"""Pallas TPU flash attention (prefill): blocked online-softmax.
+
+Design for the MXU/VMEM hierarchy:
+
+* grid = (B·Hq, T/BQ, S/BKV); the KV axis is the innermost (sequential)
+  dimension so the f32 accumulator lives in VMEM scratch across KV steps.
+* Q tile [BQ, D] and KV tiles [BKV, D] are VMEM-resident; BQ = BKV = 128
+  aligns both MXU operands (D = 64..256 for the assigned archs).
+* online softmax carries (m, l) row statistics in SMEM-sized scratch,
+  rescaling the accumulator per step — memory is O(BQ·D) independent of S.
+* causal + sliding-window masks are iota comparisons; fully-masked KV
+  blocks are skipped via ``pl.when`` (no MXU work issued).
+* GQA: the kernel receives K/V already indexed per-q-head (the wrapper maps
+  q-head → kv-head in the BlockSpec index_map, so no repeat materialises).
+
+VMEM per step (BQ=BKV=128, D=256, f32 accum):
+  q/k/v tiles 3·128·256·4 ≈ 384 KiB, acc 128 KiB, logits 64 KiB → < 1 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  block_q: int, block_kv: int, t_total: int, s_total: int):
+    iq = pl.program_id(1)
+    ikv = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # absolute positions (queries sit at the tail of the context)
+    q_start = iq * block_q + (s_total - t_total)
+    kv_start = ikv * block_kv
+
+    # block-level reachability: any (qpos >= kpos) and within window
+    q_hi = q_start + block_q - 1
+    k_lo = kv_start
+    k_hi = kv_start + block_kv - 1
+    reachable = True
+    if causal:
+        reachable = k_lo <= q_hi
+    if window is not None:
+        reachable = jnp.logical_and(reachable, k_hi > q_start - window)
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [BQ, D]
+        k = k_ref[0, 0].astype(jnp.float32)  # [BKV, D]
+        v = v_ref[0, 0].astype(jnp.float32)  # [BKV, D]
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [BQ, BKV]
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+        kpos = kv_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        mask = jnp.ones_like(logits, dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[...]                                  # [BQ]
+        m_cur = jnp.max(logits, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard: rows with everything masked keep NEG_INF
+        p = jnp.exp(logits - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        alpha = jnp.where(m_prev == NEG_INF, 0.0, alpha)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ikv == n_kv - 1)
+    def _finalize():
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_kv",
+                     "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # [B, Hq, T, D]
+    k: jax.Array,  # [B, Hkv, S, D]
+    v: jax.Array,  # [B, Hkv, S, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    assert Hq % Hkv == 0, "GQA requires Hq % Hkv == 0"
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    block_q = min(block_q, T)
+    block_kv = min(block_kv, S)
+    assert T % block_q == 0 and S % block_kv == 0
+
+    grid = (B * Hq, T // block_q, S // block_kv)
+
+    def q_index(h, iq, ikv):
+        return (h // Hq, h % Hq, iq, 0)
+
+    def kv_index(h, iq, ikv):
+        b, hq = h // Hq, h % Hq
+        return (b, hq // group, ikv, 0)  # GQA: share the kv head
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, t_total=T, s_total=S)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), q_index),
+            pl.BlockSpec((1, 1, block_kv, D), kv_index),
+            pl.BlockSpec((1, 1, block_kv, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), q_index),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),    # acc
+            pltpu.VMEM((block_q,), jnp.float32),      # m
+            pltpu.VMEM((block_q,), jnp.float32),      # l
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,34 @@
+"""Jit'd public attention entry point with pallas/ref dispatch."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Blocked attention.  [B,Hq,T,D] x [B,Hkv,S,D] -> [B,Hq,T,D].
+
+    ``use_pallas=False`` (default on CPU / in dry-run lowering) runs the
+    pure-jnp reference, which XLA fuses adequately and which keeps the
+    dry-run HLO compilable on any backend; on real TPU pass
+    ``use_pallas=True`` for the VMEM-blocked kernel.
+    """
+    if use_pallas:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, scale=scale,
+            interpret=interpret)
+    return attention_ref(q, k, v, causal=causal, window=window, scale=scale)

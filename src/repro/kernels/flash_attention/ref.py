@@ -1,0 +1,91 @@
+"""Pure-jnp oracle for blocked attention (causal / sliding-window, GQA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _constrain(x, *axes):
+    # lazy import: repro.models imports the kernels package, so a top-level
+    # import here would be circular
+    from ...models.sharding import constrain
+    return constrain(x, *axes)
+
+
+def attention_ref(
+    q: jax.Array,          # [B, Hq, T, D]
+    k: jax.Array,          # [B, Hkv, S, D]
+    v: jax.Array,          # [B, Hkv, S, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,   # sliding window size (None = full)
+    scale: float | None = None,
+    q_chunk: int = 1024,
+) -> jax.Array:            # [B, Hq, T, D]
+    """Chunked-over-queries attention (statically unrolled).
+
+    The f32 [B,H,T,S] logits tensor of a naive softmax-attention dominated
+    HBM at the 4k/32k cells; chunking queries bounds the live score block at
+    [B, H, q_chunk, S_visible] (the jnp analogue of the Pallas kernel's
+    blocking).  A *python* loop — not lax.map — so dry-run cost_analysis
+    counts every chunk's FLOPs.  Extras vs naive:
+
+    * bf16 inputs keep bf16 score/prob tensors (f32 only for the row
+      reductions), halving the workspace;
+    * sliding-window layers statically slice the reachable KV range per
+      chunk — at 32k context a 1k-window layer touches 1/16th of the keys
+      (the jnp analogue of the kernel's block skipping);
+    * causal chunks drop keys beyond the chunk's last query.
+    """
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    acc_dt = jnp.float32 if q.dtype == jnp.float32 else jnp.bfloat16
+    kq = jnp.repeat(k, group, axis=1).astype(acc_dt)
+    vq = jnp.repeat(v, group, axis=1).astype(acc_dt)
+
+    def one_chunk(qc: jax.Array, q0: int) -> jax.Array:
+        Tc = qc.shape[2]
+        off = S - T  # queries occupy the LAST T positions of the context
+        # static reachable KV range for this chunk
+        k_lo, k_hi = 0, S
+        if causal:
+            k_hi = min(S, q0 + off + Tc)
+        if window is not None:
+            k_lo = max(0, q0 + off - window + 1)
+        ks = kq[:, :, k_lo:k_hi, :]
+        vs = vq[:, :, k_lo:k_hi, :]
+        logits = jnp.einsum("bhtd,bhsd->bhts", qc.astype(acc_dt), ks)
+        logits = logits * jnp.asarray(scale, acc_dt)  # stays acc_dt-sized
+        # shard the score block: heads when they divide the mesh axis,
+        # otherwise the query-chunk dim ("attn_q" falls back — minitron's 24
+        # heads / whisper's 6 heads don't divide 16)
+        logits = _constrain(logits, "batch", "heads", "attn_q", None)
+        qpos = q0 + jnp.arange(Tc) + off
+        kpos = k_lo + jnp.arange(k_hi - k_lo)
+        mask = jnp.ones((Tc, k_hi - k_lo), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        p = jnp.exp((logits - m).astype(acc_dt))
+        p = jnp.where(mask[None, None], p, 0)
+        denom = jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True)
+        probs = (p / jnp.maximum(denom, 1e-30).astype(acc_dt))
+        probs = _constrain(probs, "batch", "heads", "attn_q", None)
+        return jnp.einsum("bhts,bhsd->bhtd", probs, vs,
+                          preferred_element_type=jnp.float32)
+
+    if T <= q_chunk:
+        return one_chunk(q, 0).astype(q.dtype)
+    outs = []
+    for q0 in range(0, T, q_chunk):
+        outs.append(one_chunk(q[:, :, q0:q0 + q_chunk], q0))
+    return jnp.concatenate(outs, axis=2).astype(q.dtype)

@@ -1,0 +1,6 @@
+from .ops import mamba_scan, mamba_step
+from .kernel import mamba_scan_pallas
+from .ref import mamba_scan_ref, mamba_step_ref
+
+__all__ = ["mamba_scan", "mamba_step", "mamba_scan_pallas", "mamba_scan_ref",
+           "mamba_step_ref"]

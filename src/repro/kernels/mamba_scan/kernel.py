@@ -1,0 +1,93 @@
+"""Pallas TPU kernel for the Mamba-1 selective scan (chunked).
+
+Decomposition for the TPU memory hierarchy:
+
+* grid = (B, D/BD, T/L) with the **time-chunk axis sequential** ("arbitrary"
+  semantics) so the recurrent state h [BD, N] persists in VMEM scratch
+  across chunks — HBM traffic is exactly one pass over x/Δ/B/C plus one
+  [BD, N] state, never T·N intermediates.
+* within a chunk the recurrence runs as an L-step ``fori_loop`` over VMEM
+  tiles; each step is [BD, N] elementwise VPU work.  (The matmul-dual SSD
+  form is a recorded hillclimb candidate — see EXPERIMENTS.md §Perf.)
+* channels are blocked at BD=512 (f32 state 512·16·4 = 32 KiB VMEM).
+
+Shapes: x/Δ [B, T, D], A [D, N], B/C [B, T, N], y [B, T, D].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(x_ref, d_ref, a_ref, b_ref, c_ref, dd_ref, y_ref, h_ref, *,
+                  chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = a_ref[...].astype(jnp.float32)        # [BD, N]
+    Dd = dd_ref[...].astype(jnp.float32)      # [BD]
+
+    def body(t, h):
+        x_t = x_ref[0, t, :].astype(jnp.float32)       # [BD]
+        d_t = d_ref[0, t, :].astype(jnp.float32)       # [BD]
+        b_t = b_ref[0, t, :].astype(jnp.float32)       # [N]
+        c_t = c_ref[0, t, :].astype(jnp.float32)       # [N]
+        a_t = jnp.exp(d_t[:, None] * A)                # [BD, N]
+        h = a_t * h + (d_t * x_t)[:, None] * b_t[None, :]
+        y_t = (h * c_t[None, :]).sum(axis=1) + x_t * Dd
+        y_ref[0, t, :] = y_t.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, body, h_ref[...])
+    h_ref[...] = h
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_d", "chunk", "interpret"))
+def mamba_scan_pallas(
+    x: jax.Array,      # [B, T, D]
+    delta: jax.Array,  # [B, T, D]
+    A: jax.Array,      # [D, N]
+    Bm: jax.Array,     # [B, T, N]
+    Cm: jax.Array,     # [B, T, N]
+    D: jax.Array,      # [D]
+    *,
+    block_d: int = 512,
+    chunk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    Bsz, T, Dm = x.shape
+    N = A.shape[1]
+    block_d = min(block_d, Dm)
+    chunk = min(chunk, T)
+    assert Dm % block_d == 0 and T % chunk == 0
+
+    grid = (Bsz, Dm // block_d, T // chunk)
+
+    y = pl.pallas_call(
+        functools.partial(_mamba_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, i, c: (b, c, i)),  # x
+            pl.BlockSpec((1, chunk, block_d), lambda b, i, c: (b, c, i)),  # Δ
+            pl.BlockSpec((block_d, N), lambda b, i, c: (i, 0)),            # A
+            pl.BlockSpec((1, chunk, N), lambda b, i, c: (b, c, 0)),        # B
+            pl.BlockSpec((1, chunk, N), lambda b, i, c: (b, c, 0)),        # C
+            pl.BlockSpec((block_d,), lambda b, i, c: (i,)),                # D
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_d), lambda b, i, c: (b, c, i)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, T, Dm), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(x, delta, A, Bm, Cm, D)
+    return y

@@ -1,0 +1,28 @@
+"""Jit'd selective-scan entry point with pallas/ref dispatch."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from .kernel import mamba_scan_pallas
+from .ref import mamba_scan_ref, mamba_step_ref
+
+
+def mamba_scan(
+    x: jax.Array, delta: jax.Array, A: jax.Array, Bm: jax.Array,
+    Cm: jax.Array, D: jax.Array, *, use_pallas: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Selective scan y [B,T,D].  (Final state via the ref when needed.)"""
+    if use_pallas:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return mamba_scan_pallas(x, delta, A, Bm, Cm, D, interpret=interpret)
+    y, _ = mamba_scan_ref(x, delta, A, Bm, Cm, D)
+    return y
+
+
+def mamba_step(x, delta, A, Bm, Cm, D, h) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step (state-carrying); pure-jnp, O(1) in sequence."""
+    return mamba_step_ref(x, delta, A, Bm, Cm, D, h)

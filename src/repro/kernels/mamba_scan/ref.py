@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan.
+
+Recurrence (per batch, channel d, state n):
+    h_t = exp(Δ_t · A[d,n]) · h_{t-1} + Δ_t · B_t[n] · x_t[d]
+    y_t = Σ_n C_t[n] · h_t[d,n] + D[d] · x_t[d]
+
+Reference uses ``jax.lax.scan`` over time (exact, O(T) sequential) and
+returns the final state so decode can continue the recurrence.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(
+    x: jax.Array,        # [B, T, D]    (post-conv activations)
+    delta: jax.Array,    # [B, T, D]    (softplus-ed step sizes)
+    A: jax.Array,        # [D, N]       (negative; log-spaced init)
+    Bm: jax.Array,       # [B, T, N]
+    Cm: jax.Array,       # [B, T, N]
+    D: jax.Array,        # [D]
+    h0: jax.Array | None = None,  # [B, D, N]
+) -> Tuple[jax.Array, jax.Array]:  # y [B,T,D], h_T [B,D,N]
+    Bsz, T, Dm = x.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, Dm, N), jnp.float32)
+
+    xf = x.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def scan_one(h0_b, x_b, d_b, B_b, C_b):
+        def body(h, inp):
+            x_t, d_t, b_t, c_t = inp
+            a = jnp.exp(d_t[:, None] * Af)              # [D, N]
+            h = a * h + (d_t * x_t)[:, None] * b_t[None, :]
+            y = (h * c_t[None, :]).sum(-1)              # [D]
+            return h, y
+        hT, ys = jax.lax.scan(body, h0_b, (x_b, d_b, B_b, C_b))
+        return hT, ys
+
+    hT, ys = jax.vmap(scan_one)(h0.astype(jnp.float32), xf, df, Bf, Cf)
+    y = ys + xf * D.astype(jnp.float32)[None, None, :]
+    return y.astype(x.dtype), hT
+
+
+def mamba_step_ref(
+    x: jax.Array,      # [B, D]  one token
+    delta: jax.Array,  # [B, D]
+    A: jax.Array,      # [D, N]
+    Bm: jax.Array,     # [B, N]
+    Cm: jax.Array,     # [B, N]
+    D: jax.Array,      # [D]
+    h: jax.Array,      # [B, D, N]
+) -> Tuple[jax.Array, jax.Array]:
+    a = jnp.exp(delta[..., None] * A[None])             # [B, D, N]
+    h = a * h.astype(jnp.float32) + (delta * x)[..., None] * Bm[:, None, :]
+    y = (h * Cm[:, None, :]).sum(-1) + x * D[None]
+    return y.astype(x.dtype), h

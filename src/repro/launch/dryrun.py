@@ -1,0 +1,454 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count at first init.
+# This forcing is dry-run-only — tests and benches see the real device(s).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions the step function),
+  * the program fits (``compiled.memory_analysis()`` per-device bytes),
+  * and it yields the roofline terms (``cost_analysis()`` FLOPs/bytes +
+    collective bytes parsed from the compiled HLO).
+
+Artifacts land in ``benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>.json``
+(resumable; EXPERIMENTS.md §Dry-run/§Roofline are generated from them).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, get_config, input_specs
+from ..configs.shapes import SHAPES, cell_applicable
+from ..models import build_model
+from ..models.sharding import (make_rules, sharding_rules, tree_pspecs)
+from ..train.optimizer import opt_state_pspecs
+from .mesh import HW, make_production_mesh
+
+ART_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+_COLL_RE = re.compile(
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*\(")
+_LINE_RE = re.compile(
+    r"=\s*(?:\()?\s*(?P<dtype>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]"
+    r".*?(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2, "f8e4m3": 1,
+    "f8e5m2": 1,
+}
+
+
+def parse_collectives(hlo: str):
+    """Per-device ICI traffic estimate from compiled (post-SPMD) HLO text."""
+    out = []
+    for line in hlo.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        dims = [int(x) for x in m.group("dims").split(",") if x] or [1]
+        nbytes = _DTYPE_BYTES.get(m.group("dtype"), 4)
+        size = nbytes
+        for d in dims:
+            size *= d
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = int(g.group(2))
+        else:
+            gb = _GROUPS_BRACE_RE.search(line)
+            n = len(gb.group(1).split(",")) if gb else 1
+        op = m.group("op")
+        # ring-algorithm per-device transferred bytes
+        if op == "all-reduce":
+            moved = 2 * size * (n - 1) / max(n, 1)
+        elif op == "all-gather":
+            moved = size * (n - 1) / max(n, 1)          # size = gathered result
+        elif op == "reduce-scatter":
+            moved = size * (n - 1)                       # size = scattered result
+        elif op == "all-to-all":
+            moved = size * (n - 1) / max(n, 1)
+        else:  # collective-permute
+            moved = size
+        out.append({"op": op, "result_bytes": size, "group": n,
+                    "moved_bytes": moved})
+    return out
+
+
+def cell_rules(mesh, shape_name: str):
+    """Logical→physical bindings per shape cell (DESIGN.md §5)."""
+    if shape_name == "long_500k":
+        return make_rules(mesh, batch=None, kv_seq=("data",),
+                          kv_heads="model")
+    if shape_name.startswith("decode"):
+        return make_rules(mesh, kv_seq="model")
+    return make_rules(mesh)
+
+
+def ep_rules(shape_name: str):
+    """Expert-parallel variant: experts over the model axis (the §Perf
+    hillclimb for MoE cells whose expert count divides the axis)."""
+    def build(mesh):
+        base = cell_rules(mesh, shape_name)
+        over = dict(base.rules)
+        over["experts"] = "model"
+        over["moe_cap"] = None
+        return make_rules(mesh, **over)
+    return build
+
+
+CACHE_RULES = {
+    "k": ("batch", "kv_heads", "kv_seq", None),
+    "v": ("batch", "kv_heads", "kv_seq", None),
+    "k_scale": ("batch", "kv_heads", "kv_seq", None),
+    "v_scale": ("batch", "kv_heads", "kv_seq", None),
+    "conv": ("batch", None, "ff"),
+    "h": ("batch", "ff", None),
+    "enc_out": ("batch", None, None),
+}
+
+
+def cache_pspecs(cache, rules):
+    def visit(path, leaf):
+        name = str(getattr(path[-1], "key", getattr(path[-1], "idx", path[-1])))
+        logical = CACHE_RULES.get(name)
+        if logical is None:
+            return P()
+        spec = [None] * (leaf.ndim - len(logical)) + [rules.axis(l) for l in logical]
+        used = set()
+        for i, (dim, a) in enumerate(zip(leaf.shape[-len(spec):], spec)):
+            if a is not None and dim % rules.mesh_axis_size(a) != 0:
+                a = None
+            flat = a if isinstance(a, tuple) else (a,) if a else ()
+            if any(f in used for f in flat):
+                a = None  # a mesh axis shards at most one dim
+            used.update(flat)
+            spec[i] = a
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+def batch_pspecs(batch, rules):
+    def visit(leaf):
+        spec = ["batch"] + [None] * (leaf.ndim - 1)
+        return rules.spec(*spec)
+    specs = jax.tree_util.tree_map(visit, batch)
+    # guard divisibility (e.g. global_batch 1)
+    def fix(leaf, spec):
+        out = []
+        for dim, a in zip(leaf.shape, spec):
+            if a is not None and dim % rules.mesh_axis_size(a) != 0:
+                a = None
+            out.append(a)
+        return P(*out)
+    return jax.tree_util.tree_map(fix, batch, specs)
+
+
+def named(mesh, tree):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), tree)
+
+
+def logits_pspec(cfg, shape, rules):
+    """(batch, vocab) spec with divisibility fallbacks."""
+    b_ax = rules.axis("batch")
+    if b_ax is not None and shape.global_batch % rules.mesh_axis_size(b_ax) != 0:
+        b_ax = None
+    v_ax = rules.axis("vocab")
+    if v_ax is not None and cfg.vocab_size % rules.mesh_axis_size(v_ax) != 0:
+        v_ax = None
+    return P(b_ax, v_ax)
+
+
+def compile_cell(cfg, shape, mesh, rules):
+    """Lower + compile one step function for one cell; returns compiled."""
+    model = build_model(cfg)
+    batch = input_specs(cfg, shape)
+    with sharding_rules(rules):
+        if shape.kind == "train":
+            state_shapes = jax.eval_shape(
+                lambda: model.init_train_state(jax.random.key(0)))
+            p_specs = tree_pspecs(state_shapes.params, rules)
+            o_specs = opt_state_pspecs(state_shapes.opt, p_specs)
+            state_specs = type(state_shapes)(p_specs, o_specs, P())
+            b_specs = batch_pspecs(batch, rules)
+            fn = jax.jit(
+                model.train_step,
+                in_shardings=(named(mesh, state_specs), named(mesh, b_specs)),
+                out_shardings=(named(mesh, state_specs),
+                               named(mesh, {"loss": P(), "step": P()})),
+                donate_argnums=(0,),
+            )
+            lowered = fn.lower(state_shapes, batch)
+        elif shape.kind == "prefill":
+            params_shapes = jax.eval_shape(
+                lambda: model.init(jax.random.key(0)))
+            p_specs = tree_pspecs(params_shapes, rules)
+            b_specs = batch_pspecs(batch, rules)
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            c_specs = cache_pspecs(cache_shapes, rules)
+            logits_spec = logits_pspec(cfg, shape, rules)
+
+            def prefill(params, b):
+                return model.prefill_step(params, b, max_len=shape.seq_len)
+
+            fn = jax.jit(
+                prefill,
+                in_shardings=(named(mesh, p_specs), named(mesh, b_specs)),
+                out_shardings=(NamedSharding(mesh, logits_spec),
+                               named(mesh, c_specs)),
+            )
+            lowered = fn.lower(params_shapes, batch)
+        else:  # decode
+            params_shapes = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+            p_specs = tree_pspecs(params_shapes, rules)
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            c_specs = cache_pspecs(cache_shapes, rules)
+            tok_spec = batch_pspecs(
+                {"tokens": batch["tokens"], "cache_len": batch["cache_len"]},
+                rules)
+            logits_spec = logits_pspec(cfg, shape, rules)
+
+            def decode(params, cache, tokens, cache_len):
+                return model.decode_step(params, cache, tokens, cache_len)
+
+            fn = jax.jit(
+                decode,
+                in_shardings=(named(mesh, p_specs), named(mesh, c_specs),
+                              named(mesh, tok_spec["tokens"]),
+                              named(mesh, tok_spec["cache_len"])),
+                out_shardings=(NamedSharding(mesh, logits_spec),
+                               named(mesh, c_specs)),
+                donate_argnums=(1,),
+            )
+            lowered = fn.lower(params_shapes, cache_shapes, batch["tokens"],
+                               batch["cache_len"])
+
+        return lowered.compile()
+
+
+def measure(compiled):
+    """flops / bytes / collective traffic of a compiled module."""
+    ca = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text())
+    moved = sum(c["moved_bytes"] for c in colls)
+    by_op = {}
+    for c in colls:
+        by_op.setdefault(c["op"], [0, 0.0])
+        by_op[c["op"]][0] += 1
+        by_op[c["op"]][1] += c["moved_bytes"]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_moved": moved,
+        "coll_by_op": by_op,
+        "n_coll": len(colls),
+    }
+
+
+def corrected_costs(cfg, shape, mesh, rules, base):
+    """XLA cost_analysis counts while-loop (scan) bodies ONCE.  Correct by
+    differencing two small *unrolled* depth variants:
+
+        X_group = X(2·g + tail layers) − X(g + tail layers)
+        X_total = X(g + tail) + (n_groups − 1) · X_group
+
+    Exact for the layer stack (each group is identical); inner time-scans
+    (mamba selective scan) remain counted once — their flops are O(T·D·N)
+    elementwise, <1% of the projection matmuls (noted in EXPERIMENTS.md).
+    """
+    g = cfg.group_len
+    n_groups = cfg.n_layers // g if cfg.scan_layers else 0
+    if n_groups <= 1:
+        return dict(base), False  # unrolled already: exact
+    tail = cfg.n_layers - n_groups * g
+    small1 = cfg.replace(n_layers=g + tail, scan_layers=False)
+    small2 = cfg.replace(n_layers=2 * g + tail, scan_layers=False)
+    m1 = measure(compile_cell(small1, shape, mesh, rules))
+    m2 = measure(compile_cell(small2, shape, mesh, rules))
+    out = {}
+    for key in ("flops", "bytes", "coll_moved"):
+        per_group = max(m2[key] - m1[key], 0.0)
+        out[key] = m1[key] + (n_groups - 1) * per_group
+    # collective op census: extrapolate counts the same way
+    by_op = {}
+    ops = set(m1["coll_by_op"]) | set(m2["coll_by_op"])
+    for op in ops:
+        c1, b1 = m1["coll_by_op"].get(op, [0, 0.0])
+        c2, b2 = m2["coll_by_op"].get(op, [0, 0.0])
+        by_op[op] = [c1 + (n_groups - 1) * max(c2 - c1, 0),
+                     b1 + (n_groups - 1) * max(b2 - b1, 0.0)]
+    out["coll_by_op"] = by_op
+    out["n_coll"] = m1["n_coll"] + (n_groups - 1) * max(
+        m2["n_coll"] - m1["n_coll"], 0)
+    return out, True
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, force: bool = False,
+             rules_override=None, tag: str = "", cfg_override=None) -> dict:
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    out_path = ART_DIR / f"{arch}__{shape_name}__{mesh_kind}{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "skipped": why}
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = rules_override(mesh) if rules_override else cell_rules(mesh, shape_name)
+    compiled = compile_cell(cfg, shape, mesh, rules)
+    t_compile = time.time() - t0
+    t_lower = 0.0
+
+    mem = compiled.memory_analysis()
+    raw = measure(compiled)
+    cost, was_corrected = corrected_costs(cfg, shape, mesh, rules, raw)
+    moved = cost["coll_moved"]
+    by_op = cost["coll_by_op"]
+    colls = list(range(cost["n_coll"]))  # count only
+
+    n_chips = 512 if mesh_kind == "multi" else 256
+    flops = cost["flops"]
+    bytes_accessed = cost["bytes"]
+    t_compute = flops / HW["peak_flops_bf16"]
+    # HBM-traffic model from the compiled buffer assignment: arguments are
+    # read once, outputs written once, every temp buffer written + read once.
+    # (XLA:CPU's "bytes accessed" counts unfused per-op operand bytes — kept
+    # as a diagnostic in cost.bytes_accessed_per_device, but it overstates
+    # fused-TPU HBM traffic by 1-2 orders.)
+    hbm_traffic = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                   + 2 * mem.temp_size_in_bytes)
+    t_memory = hbm_traffic / HW["hbm_bw"]
+    t_memory_hlo = bytes_accessed / HW["hbm_bw"]
+    t_coll = moved / (HW["ici_links"] * HW["ici_bw_per_link"])
+
+    # MODEL_FLOPS (whole step, all chips)
+    n_p = cfg.n_params()
+    n_a = cfg.n_active_params()
+    if shape.kind == "train":
+        model_flops = 6 * n_a * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        model_flops = 2 * n_a * shape.global_batch * shape.seq_len
+    else:
+        model_flops = 2 * n_a * shape.global_batch
+    model_flops_per_chip = model_flops / n_chips
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "n_chips": n_chips,
+        "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+            "hbm_bytes": HW["hbm_bytes"],
+        },
+        "cost": {
+            "flops_per_device": flops,
+            "bytes_accessed_per_device": bytes_accessed,
+            "scan_corrected": was_corrected,
+            "raw_flops_per_device": raw["flops"],
+            "raw_bytes_per_device": raw["bytes"],
+        },
+        "collectives": {
+            "moved_bytes_per_device": moved,
+            "by_op": {k: {"count": v[0], "moved_bytes": v[1]}
+                      for k, v in by_op.items()},
+            "n_collectives": len(colls),
+        },
+        "roofline": {
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_memory_hlo_s": t_memory_hlo,
+            "hbm_traffic_bytes": hbm_traffic,
+            "t_collective_s": t_coll,
+            "dominant": max(
+                [("compute", t_compute), ("memory", t_memory),
+                 ("collective", t_coll)], key=lambda kv: kv[1])[0],
+            "model_flops_total": model_flops,
+            "model_flops_per_chip": model_flops_per_chip,
+            "useful_flops_ratio": (model_flops_per_chip / flops) if flops else 0.0,
+            "roofline_fraction": (
+                model_flops_per_chip / HW["peak_flops_bf16"]
+                / max(t_compute, t_memory, t_coll)
+            ) if max(t_compute, t_memory, t_coll) > 0 else 0.0,
+        },
+        "params": {"total": n_p, "active": n_a},
+    }
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                key = f"{arch} × {shape} × {mesh_kind}"
+                try:
+                    rec = run_cell(arch, shape, mesh_kind, force=args.force)
+                    if "skipped" in rec:
+                        print(f"[skip] {key}: {rec['skipped']}", flush=True)
+                    else:
+                        r = rec["roofline"]
+                        print(
+                            f"[ ok ] {key}: compile={rec['t_compile_s']}s "
+                            f"dom={r['dominant']} "
+                            f"frac={r['roofline_fraction']:.3f} "
+                            f"mem={rec['memory']['peak_estimate_bytes']/2**30:.2f}GiB",
+                            flush=True)
+                except Exception as e:
+                    failures.append((key, repr(e)))
+                    print(f"[FAIL] {key}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for k, e in failures:
+            print(" ", k, e)
+        raise SystemExit(1)
+    print("\nall requested dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh construction (single-pod 16×16, multi-pod 2×16×16).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (device count is locked at first jax init, and
+only ``dryrun.py`` forces the 512-device host platform).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware model for the roofline (per chip)
+HW = {
+    "peak_flops_bf16": 197e12,     # FLOP/s
+    "hbm_bw": 819e9,               # B/s
+    "ici_bw_per_link": 50e9,       # B/s per link (~)
+    "ici_links": 4,                # 2D torus: 4 links/chip (v5e)
+    "hbm_bytes": 16 * 1024**3,
+}

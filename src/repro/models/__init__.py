@@ -1,0 +1,6 @@
+"""Model substrate: layers, attention, mamba, MoE, transformer assembly."""
+from .model import Model, TrainState, build_model
+from .sharding import ShardingRules, make_rules, sharding_rules, tree_pspecs
+
+__all__ = ["Model", "TrainState", "build_model", "ShardingRules",
+           "make_rules", "sharding_rules", "tree_pspecs"]

@@ -1,0 +1,172 @@
+"""Attention blocks: GQA/MHA, causal, sliding-window, cross, KV caching.
+
+Three execution modes share one parameter set:
+* ``train``/``prefill``: full-sequence flash attention (ref-jnp by default so
+  dry-run HLO compiles on any backend; Pallas kernel on real TPU);
+* ``decode``: one token against a cache — a contiguous buffer for global
+  layers, a **ring buffer of size window** for sliding-window layers (keys
+  are RoPE-rotated before caching, so slot order is irrelevant to the
+  softmax — set semantics);
+* optional int8-quantised cache (per-token per-head scales) for the
+  ≥100B-param cells (see DESIGN.md §5 memory table).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels.decode_attention import decode_attention
+from ..kernels.flash_attention import flash_attention
+from .layers import dense_init, rope
+from .sharding import constrain
+
+
+def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False) -> Dict:
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * dh, dtype),
+        "wk": dense_init(ks[1], d, hk * dh, dtype),
+        "wv": dense_init(ks[2], d, hk * dh, dtype),
+        "wo": dense_init(ks[3], h * dh, d, dtype),
+    }
+
+
+# ----------------------------------------------------------- cache handling
+def quantize_kv(x: jax.Array, dtype: str) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """[B, Hkv, S, Dh] -> (stored, scale) with per-(token, head) scales."""
+    if dtype != "int8":
+        return x, None
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jax.Array, scale: Optional[jax.Array], dtype) -> jax.Array:
+    if scale is None:
+        return q
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, length: int, *, window: bool,
+               dtype) -> Dict:
+    """ShapeDtype-compatible cache for one attention layer."""
+    size = min(length, cfg.sliding_window) if (window and cfg.sliding_window) else length
+    hk, dh = cfg.n_kv_heads, cfg.head_dim
+    store_dtype = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+    c = {
+        "k": jnp.zeros((batch, hk, size, dh), store_dtype),
+        "v": jnp.zeros((batch, hk, size, dh), store_dtype),
+    }
+    if cfg.kv_cache_dtype == "int8":
+        c["k_scale"] = jnp.zeros((batch, hk, size, 1), jnp.float32)
+        c["v_scale"] = jnp.zeros((batch, hk, size, 1), jnp.float32)
+    return c
+
+
+# ------------------------------------------------------------------ forward
+def attention_forward(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,                 # [B, T, D]
+    *,
+    positions: jax.Array,         # [B, T] absolute positions
+    mode: str,                    # train | prefill | decode
+    causal: bool = True,
+    window: Optional[int] = None,
+    cache: Optional[Dict] = None,
+    cache_len: Optional[jax.Array] = None,   # int32[B]
+    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,  # cross-attn
+    use_pallas: bool = False,
+    max_cache_len: Optional[int] = None,     # prefill: cache capacity
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, T, D = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+
+    q = (x @ p["wq"]).reshape(B, T, h, dh)
+    if kv_override is None:
+        k = (x @ p["wk"]).reshape(B, T, hk, dh)
+        v = (x @ p["wv"]).reshape(B, T, hk, dh)
+        if cfg.pos_embedding == "rope":
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+    else:
+        enc = kv_override[0]  # [B, S_enc, D]
+        S_enc = enc.shape[1]
+        k = (enc @ p["wk"]).reshape(B, S_enc, hk, dh)
+        v = (enc @ p["wv"]).reshape(B, S_enc, hk, dh)
+        causal, window = False, None
+
+    q = q.transpose(0, 2, 1, 3)  # [B, H, T, Dh]
+    q = constrain(q, "batch", "heads", None, None)
+
+    new_cache = None
+    if mode == "decode" and kv_override is None:
+        assert cache is not None and cache_len is not None and T == 1
+        k1 = k.transpose(0, 2, 1, 3)  # [B, Hkv, 1, Dh]
+        v1 = v.transpose(0, 2, 1, 3)
+        size = cache["k"].shape[2]
+        # ring-buffer slot: absolute position p lives at slot p % size
+        # (for global layers size == max length, so slot == cache_len)
+        slot = cache_len % size
+        kq, ks = quantize_kv(k1, cfg.kv_cache_dtype)
+        vq, vs = quantize_kv(v1, cfg.kv_cache_dtype)
+
+        def upd(buf, val):
+            # per-batch dynamic slot update
+            def one(b_buf, b_val, b_slot):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    b_buf, b_val, b_slot, axis=1)
+            return jax.vmap(one)(buf, val, slot)
+
+        new_cache = dict(cache)
+        new_cache["k"] = upd(cache["k"], kq)
+        new_cache["v"] = upd(cache["v"], vq)
+        if cfg.kv_cache_dtype == "int8":
+            new_cache["k_scale"] = upd(cache["k_scale"], ks)
+            new_cache["v_scale"] = upd(cache["v_scale"], vs)
+
+        k_full = dequantize_kv(new_cache["k"], new_cache.get("k_scale"), dt)
+        v_full = dequantize_kv(new_cache["v"], new_cache.get("v_scale"), dt)
+        valid = jnp.minimum(cache_len + 1, size)  # ring: whole buffer once wrapped
+        out = decode_attention(
+            q[:, :, 0, :], k_full, v_full, valid,
+            scale=dh ** -0.5, use_pallas=use_pallas)  # [B, H, Dh]
+        out = out[:, :, None, :]
+    else:
+        k = k.transpose(0, 2, 1, 3)  # [B, Hkv, S, Dh]
+        v = v.transpose(0, 2, 1, 3)
+        out = flash_attention(
+            q, k, v, causal=causal, window=window, scale=dh ** -0.5,
+            use_pallas=use_pallas)
+        if mode == "prefill" and kv_override is None:
+            cap = max_cache_len or T
+            size = min(cap, window) if window else cap
+            keep = min(T, size)
+            kc = k[:, :, T - keep:, :]
+            vc = v[:, :, T - keep:, :]
+            if keep < T or (window and size == window):
+                # ring invariant: absolute position p lives at slot p % size
+                shift = (T - keep) % size
+                kc = jnp.roll(jnp.pad(
+                    kc, ((0, 0), (0, 0), (0, size - keep), (0, 0))), shift, axis=2)
+                vc = jnp.roll(jnp.pad(
+                    vc, ((0, 0), (0, 0), (0, size - keep), (0, 0))), shift, axis=2)
+            elif size > keep:
+                kc = jnp.pad(kc, ((0, 0), (0, 0), (0, size - keep), (0, 0)))
+                vc = jnp.pad(vc, ((0, 0), (0, 0), (0, size - keep), (0, 0)))
+            kq, ks = quantize_kv(kc, cfg.kv_cache_dtype)
+            vq, vs = quantize_kv(vc, cfg.kv_cache_dtype)
+            new_cache = {"k": kq, "v": vq}
+            if cfg.kv_cache_dtype == "int8":
+                new_cache["k_scale"] = ks
+                new_cache["v_scale"] = vs
+
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, h * dh)
+    y = out @ p["wo"]
+    return constrain(y, "batch", "seq", "embed"), new_cache

@@ -1,0 +1,81 @@
+"""Primitive layers: norms, embeddings, RoPE, activations, dense projections.
+
+Functional style: ``init_*`` builds param dicts (named leaves drive the
+sharding rules in :mod:`repro.models.sharding`), ``apply`` functions are
+pure.  Norm/softmax statistics accumulate in fp32 regardless of the compute
+dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[cfg.dtype]
+
+
+# ------------------------------------------------------------------- inits
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32)).astype(dtype)
+
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+# ------------------------------------------------------------------ applies
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def activation(name: str, gate: jax.Array, up: Optional[jax.Array]) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(gate) * up
+    if name == "gelu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    if name == "relu2":
+        r = jax.nn.relu(gate)
+        return r * r  # squared-ReLU, ungated (nemotron)
+    raise ValueError(name)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return (jnp.tanh(x.astype(jnp.float32) / cap) * cap).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- rope
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x [..., T, H, Dh]; positions [..., T] (absolute)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # [..., T, half]
+    sin = jnp.sin(ang)[..., None, :]  # broadcast over heads
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def learned_positions(table: jax.Array, positions: jax.Array) -> jax.Array:
+    # extend-by-wraparound beyond the published table (DESIGN.md §4 note)
+    return jnp.take(table, positions % table.shape[0], axis=0)

@@ -1,0 +1,112 @@
+"""Mamba-1 block (falcon-mamba, jamba mixer layers).
+
+in_proj → depthwise causal conv1d → SiLU → selective scan (Pallas kernel /
+jnp ref) → gate → out_proj.  Decode mode carries (conv window, ssm state)
+per layer; both are O(1) in sequence length — this is why the SSM/hybrid
+archs run the ``long_500k`` cell that dense attention cannot.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels.mamba_scan import mamba_scan, mamba_step
+from .layers import dense_init
+from .sharding import constrain
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> Dict:
+    d, di, n, r, kw = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank,
+                       cfg.ssm_conv)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (kw, di), jnp.float32)
+                   / math.sqrt(kw)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, r + 2 * n, dtype),
+        "dt_w": dense_init(ks[3], r, di, dtype),
+        "dt_b": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(A),                   # fp32
+        "Dp": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, d, dtype),
+    }
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 history: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv.  x [B, T, Di], w [K, Di]."""
+    K = w.shape[0]
+    pad = history if history is not None else jnp.zeros(
+        (x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # [B, T+K-1, Di]
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return out + b[None, None, :]
+
+
+def mamba_forward(
+    p: Dict, cfg: ModelConfig, x: jax.Array, *, mode: str,
+    cache: Optional[Dict] = None, use_pallas: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, T, D = x.shape
+    di, n, r = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    dt = x.dtype
+
+    xz = x @ p["in_proj"]                              # [B, T, 2Di]
+    xz = constrain(xz, "batch", "seq", "ff")
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and T == 1
+        hist = cache["conv"].astype(dt)
+        conv_out = _causal_conv(xi, p["conv_w"].astype(dt), p["conv_b"].astype(dt), hist)
+        new_conv = jnp.concatenate([hist, xi], axis=1)[:, 1:, :].astype(dt)
+        u = jax.nn.silu(conv_out)                      # [B, 1, Di]
+        bcd = u @ p["x_proj"]                          # [B, 1, r+2n]
+        dt_in, Bm, Cm = jnp.split(bcd, [r, r + n], axis=-1)
+        delta = jax.nn.softplus(dt_in @ p["dt_w"] + p["dt_b"])
+        A = -jnp.exp(p["A_log"])
+        y, h_new = mamba_step(
+            u[:, 0].astype(jnp.float32), delta[:, 0].astype(jnp.float32), A,
+            Bm[:, 0].astype(jnp.float32), Cm[:, 0].astype(jnp.float32),
+            p["Dp"], cache["h"])
+        y = y[:, None, :].astype(dt)
+        new_cache = {"conv": new_conv, "h": h_new}
+    else:
+        conv_out = _causal_conv(xi, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+        u = jax.nn.silu(conv_out)
+        bcd = u @ p["x_proj"]
+        dt_in, Bm, Cm = jnp.split(bcd, [r, r + n], axis=-1)
+        delta = jax.nn.softplus(dt_in @ p["dt_w"] + p["dt_b"])
+        A = -jnp.exp(p["A_log"])
+        if mode == "prefill":
+            from ..kernels.mamba_scan import mamba_scan_ref
+            y, hT = mamba_scan_ref(
+                u.astype(jnp.float32), delta.astype(jnp.float32), A,
+                Bm.astype(jnp.float32), Cm.astype(jnp.float32), p["Dp"])
+            y = y.astype(dt)
+            kw = cfg.ssm_conv
+            new_cache = {"conv": xi[:, -(kw - 1):, :].astype(dt), "h": hT}
+        else:
+            y = mamba_scan(
+                u.astype(jnp.float32), delta.astype(jnp.float32), A,
+                Bm.astype(jnp.float32), Cm.astype(jnp.float32), p["Dp"],
+                use_pallas=use_pallas).astype(dt)
+
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return constrain(out, "batch", "seq", "embed"), new_cache

@@ -1,0 +1,201 @@
+"""Logical-axis sharding: MaxText-style rules mapping logical names to mesh axes.
+
+Model code annotates activations with *logical* axes (``batch``, ``seq``,
+``embed``, ``heads``, ``ff``, ``vocab``, ``kv_seq``, ``experts``…); the
+launcher installs a :class:`ShardingRules` context binding them to physical
+mesh axes per cell (e.g. ``batch → ('pod','data')`` for training,
+``kv_seq → 'data'`` for long-context decode).  With no context installed
+(CPU smoke tests) every annotation is a no-op, so the same model code runs
+everywhere.
+
+Parameter shardings use the same rules via :func:`param_pspec`, which maps
+leaf *path names* to logical axis tuples and degrades gracefully when a
+dimension does not divide the mesh axis (falls back to replication for that
+dim — e.g. whisper's 51865 vocab over a 16-way model axis).
+"""
+from __future__ import annotations
+
+import re
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+
+@dataclass
+class ShardingRules:
+    mesh: Mesh
+    rules: Dict[str, Axis] = field(default_factory=dict)
+
+    def axis(self, logical: Optional[str]) -> Axis:
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*[self.axis(l) for l in logical])
+
+    def mesh_axis_size(self, axis: Axis) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, tuple):
+            n = 1
+            for a in axis:
+                n *= self.mesh.shape[a]
+            return n
+        return self.mesh.shape[axis]
+
+
+_CTX = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_CTX, "rules", None)
+
+
+@contextmanager
+def sharding_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_CTX, "rules", None)
+    _CTX.rules = rules
+    try:
+        yield rules
+    finally:
+        _CTX.rules = prev
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without a context)."""
+    r = current_rules()
+    if r is None:
+        return x
+    assert x.ndim == len(logical), (x.shape, logical)
+    spec = []
+    used: set = set()
+    for dim, l in zip(x.shape, logical):
+        a = r.axis(l)
+        if a is not None and dim % r.mesh_axis_size(a) != 0:
+            a = None  # non-divisible: leave unconstrained
+        flat = a if isinstance(a, tuple) else (a,) if a else ()
+        if any(f in used for f in flat):
+            a = None  # a mesh axis may shard only one dim
+        used.update(flat)
+        spec.append(a)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, P(*spec)))
+
+
+# --------------------------------------------------------------- param rules
+# leaf-name -> logical axes of the LAST ndim dims (leading stack dims -> None)
+PARAM_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    "tok": ("vocab", "embed_shard"),
+    "pos": (None, None),
+    "lm_head": ("embed_shard", "vocab"),
+    "wq": ("embed_shard", "heads"),
+    "wk": ("embed_shard", "heads"),
+    "wv": ("embed_shard", "heads"),
+    "wo": ("heads", "embed_shard"),
+    "q_norm": (None,),
+    "k_norm": (None,),
+    "wi_gate": ("embed_shard", "ff"),
+    "wi_up": ("embed_shard", "ff"),
+    "wo_ff": ("ff", "embed_shard"),
+    "router": ("embed_shard", None),
+    "e_gate": ("experts", "embed_shard", "ff"),
+    "e_up": ("experts", "embed_shard", "ff"),
+    "e_down": ("experts", "ff", "embed_shard"),
+    "in_proj": ("embed_shard", "ff"),
+    "conv_w": (None, "ff"),
+    "conv_b": ("ff",),
+    "x_proj": ("ff", None),
+    "dt_w": (None, "ff"),
+    "dt_b": ("ff",),
+    "A_log": ("ff", None),
+    "Dp": ("ff",),
+    "out_proj": ("ff", "embed_shard"),
+    "scale": (None,),
+    "bias": (None,),
+}
+
+# default logical -> physical binding used by the launcher; per-cell overrides
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    # Megatron-style sequence parallelism: residuals / norms / elementwise
+    # work and the scan-saved activations are seq-sharded over 'model';
+    # GSPMD all-gathers around attention and reduce-scatters after (the
+    # collective cost shows up in the roofline's collective term).
+    "seq": "model",
+    "embed": None,            # activation embed dim: replicated
+    "embed_shard": "data",    # parameter embed dim: FSDP-sharded over data
+    "vocab": "model",
+    "heads": "model",
+    "ff": "model",
+    "experts": None,          # TP-MoE baseline: experts replicated, ff sharded
+    "kv_heads": "model",
+    "kv_seq": None,
+    "ssm_state": None,
+    "ce_seq": "model",        # CE chunk sequence dim (distributes logits)
+    "attn_q": "model",        # attention q-chunk dim (fallback when heads
+                              # don't divide the axis; deduped otherwise)
+    "moe_cap": "model",       # MoE expert-capacity dim (dispatch buffers)
+    "moe_slots": "model",     # MoE token-slot dim ([B, T·K, D] tensors)
+}
+
+
+def make_rules(mesh: Mesh, **overrides: Axis) -> ShardingRules:
+    rules = dict(DEFAULT_RULES)
+    # drop axes the mesh doesn't have (e.g. 'pod' on the single-pod mesh)
+    def filter_axis(a: Axis) -> Axis:
+        if a is None:
+            return None
+        if isinstance(a, tuple):
+            kept = tuple(x for x in a if x in mesh.shape)
+            return kept if kept else None
+        return a if a in mesh.shape else None
+
+    rules.update(overrides)
+    rules = {k: filter_axis(v) for k, v in rules.items()}
+    return ShardingRules(mesh=mesh, rules=rules)
+
+
+def param_pspec(path: str, ndim: int, shape: Tuple[int, ...],
+                rules: ShardingRules) -> P:
+    """PartitionSpec for a parameter leaf by its path name."""
+    name = path.split("/")[-1]
+    logical = PARAM_RULES.get(name)
+    if logical is None:
+        return P()
+    spec: list = [None] * (ndim - len(logical)) + [
+        rules.axis(l) for l in logical
+    ]
+    # replicate non-divisible dims; a mesh axis shards at most one dim
+    # (earlier logical axes win — e.g. EP: experts take 'model', ff yields)
+    used: set = set()
+    for i, (dim, a) in enumerate(zip(shape[-len(spec):], spec)):
+        if a is not None and dim % rules.mesh_axis_size(a) != 0:
+            a = None
+        flat = a if isinstance(a, tuple) else (a,) if a else ()
+        if any(f in used for f in flat):
+            a = None
+        used.update(flat)
+        spec[i] = a
+    return P(*spec)
+
+
+def tree_pspecs(params, rules: ShardingRules):
+    """Map a parameter pytree to a same-structure tree of PartitionSpecs."""
+    def visit(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        return param_pspec(name, leaf.ndim, leaf.shape, rules)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def tree_shardings(params, rules: ShardingRules):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(rules.mesh, s), tree_pspecs(params, rules))

@@ -1,0 +1,296 @@
+"""Model assembly: decoder-only LM (dense/ssm/moe/hybrid/vlm) + enc-dec (audio).
+
+Layer stacks run as ``jax.lax.scan`` over *repeating groups* (one group =
+the architecture's layer pattern: 1 layer for uniform stacks, 6 for
+gemma3's 5-local:1-global, 8 for jamba's 7-mamba:1-attn) so HLO size and
+compile time are O(group), not O(n_layers) — essential for the 62-88 layer
+archs on the 512-device dry-run.  Layers that don't fill a whole group
+("tail") and the whisper enc-dec run unrolled.
+
+Modes: ``train`` (logits for loss), ``prefill`` (logits + cache),
+``decode`` (one token + cache update).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import attention_forward, init_attention, init_cache
+from .layers import (dtype_of, embed_init, init_rmsnorm, learned_positions,
+                     rmsnorm, softcap)
+from .mamba import init_mamba, init_mamba_cache, mamba_forward
+from .mlp import dense_ffn, init_dense_ffn, init_moe_ffn, moe_ffn
+from .sharding import constrain
+
+
+# ---------------------------------------------------------------------- init
+def init_layer(key, cfg: ModelConfig, mixer: str, ffn: str, dtype,
+               cross: bool = False) -> Dict:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": init_rmsnorm(cfg.d_model, dtype)}
+    if mixer.startswith("attn"):
+        p["attn"] = init_attention(ks[0], cfg, dtype)
+    else:
+        p["mamba"] = init_mamba(ks[0], cfg, dtype)
+    if cross:
+        p["norm_cross"] = init_rmsnorm(cfg.d_model, dtype)
+        p["cross"] = init_attention(ks[3], cfg, dtype, cross=True)
+    if ffn != "none":
+        p["norm2"] = init_rmsnorm(cfg.d_model, dtype)
+        p["ffn"] = (init_moe_ffn(ks[1], cfg, dtype) if ffn == "moe"
+                    else init_dense_ffn(ks[1], cfg, dtype))
+    return p
+
+
+def _plan(cfg: ModelConfig) -> Tuple[int, int, List[Tuple[str, str]]]:
+    """(n_groups, n_tail, kinds-per-group-position)."""
+    g = cfg.group_len if cfg.scan_layers else cfg.n_layers
+    if not cfg.scan_layers:
+        return 0, cfg.n_layers, [cfg.layer_kind(i) for i in range(cfg.n_layers)]
+    n_groups = cfg.n_layers // g
+    n_tail = cfg.n_layers - n_groups * g
+    kinds = [cfg.layer_kind(j) for j in range(g)]
+    return n_groups, n_tail, kinds
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    dtype = dtype_of(cfg)
+    n_groups, n_tail, kinds = _plan(cfg)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": {"tok": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype)},
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if cfg.pos_embedding == "learned":
+        length = cfg.decoder_positions or 2048
+        params["embed"]["pos"] = embed_init(keys[1], length, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        from .layers import dense_init
+        params["lm_head"] = dense_init(keys[2], cfg.d_model, cfg.vocab_size, dtype)
+
+    cross = cfg.is_encoder_decoder
+    if n_groups:
+        gkeys = jax.random.split(keys[3], n_groups)
+        stacked = []
+        for j, (mixer, ffn) in enumerate(kinds):
+            def one(k, j=j, mixer=mixer, ffn=ffn):
+                return init_layer(jax.random.fold_in(k, j), cfg, mixer, ffn,
+                                  dtype, cross=cross)
+            stacked.append(jax.vmap(one)(gkeys))
+        params["groups"] = stacked
+    tail = []
+    tail_kinds = ([cfg.layer_kind(n_groups * cfg.group_len + i)
+                   for i in range(n_tail)] if cfg.scan_layers else kinds)
+    for i, (mixer, ffn) in enumerate(tail_kinds):
+        tail.append(init_layer(jax.random.fold_in(keys[4], i), cfg, mixer,
+                               ffn, dtype, cross=cross))
+    params["tail"] = tail
+
+    if cfg.is_encoder_decoder:
+        enc_layers = []
+        for i in range(cfg.n_encoder_layers):
+            enc_layers.append(init_layer(
+                jax.random.fold_in(keys[5], i), cfg, "attn", "dense", dtype))
+        params["encoder"] = {
+            "layers": enc_layers,
+            "pos": embed_init(keys[6], cfg.encoder_positions, cfg.d_model, dtype),
+            "final_norm": init_rmsnorm(cfg.d_model, dtype),
+        }
+    return params
+
+
+# --------------------------------------------------------------------- cache
+def init_layer_cache(cfg: ModelConfig, mixer: str, batch: int, length: int,
+                     dtype) -> Dict:
+    if mixer == "mamba":
+        return init_mamba_cache(cfg, batch, dtype)
+    return init_cache(cfg, batch, length, window=(mixer == "attn_local"),
+                      dtype=dtype)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, length: int) -> Dict:
+    """Whole-model cache pytree (used concretely and as ShapeDtypeStructs)."""
+    dtype = dtype_of(cfg)
+    n_groups, n_tail, kinds = _plan(cfg)
+    cache: Dict[str, Any] = {}
+    if n_groups:
+        stacked = []
+        for mixer, _ in kinds:
+            one = init_layer_cache(cfg, mixer, batch, length, dtype)
+            stacked.append(jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), one))
+        cache["groups"] = stacked
+    tail_kinds = ([cfg.layer_kind(n_groups * cfg.group_len + i)
+                   for i in range(n_tail)] if cfg.scan_layers else kinds)
+    cache["tail"] = [init_layer_cache(cfg, m, batch, length, dtype)
+                     for m, _ in tail_kinds]
+    if cfg.is_encoder_decoder:
+        cache["enc_out"] = jnp.zeros(
+            (batch, cfg.encoder_positions, cfg.d_model), dtype)
+    return cache
+
+
+# ------------------------------------------------------------------- forward
+def apply_layer(p: Dict, cfg: ModelConfig, x: jax.Array, mixer: str, ffn: str,
+                *, positions, mode, cache, cache_len, enc_out,
+                use_pallas: bool, max_cache_len: Optional[int] = None,
+                ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if mixer.startswith("attn"):
+        window = cfg.sliding_window if mixer == "attn_local" else None
+        causal = not (cfg.is_encoder_decoder and mode == "encode")
+        att, new_cache = attention_forward(
+            p["attn"], cfg, h, positions=positions, mode=mode, causal=causal,
+            window=window, cache=cache, cache_len=cache_len,
+            use_pallas=use_pallas, max_cache_len=max_cache_len)
+    else:
+        att, new_cache = mamba_forward(
+            p["mamba"], cfg, h, mode=mode, cache=cache, use_pallas=use_pallas)
+    x = x + att
+    if "cross" in p and enc_out is not None:
+        hc = rmsnorm(p["norm_cross"], x, cfg.norm_eps)
+        catt, _ = attention_forward(
+            p["cross"], cfg, hc, positions=positions, mode="train",
+            kv_override=(enc_out, enc_out), use_pallas=use_pallas)
+        x = x + catt
+    if ffn != "none":
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            y, aux = moe_ffn(p["ffn"], cfg, h2)
+        else:
+            y = dense_ffn(p["ffn"], cfg, h2)
+        x = x + y
+    return x, new_cache, aux
+
+
+def encoder_forward(params: Dict, cfg: ModelConfig, frames: jax.Array,
+                    use_pallas: bool = False) -> jax.Array:
+    """Whisper encoder over precomputed (stub-frontend) frame embeddings."""
+    enc = params["encoder"]
+    S = frames.shape[1]
+    x = frames + enc["pos"][None, :S, :]
+    pos = jnp.broadcast_to(jnp.arange(S)[None], frames.shape[:2])
+    for lp in enc["layers"]:
+        x, _, _ = apply_layer(
+            lp, cfg, x, "attn", "dense", positions=pos, mode="encode",
+            cache=None, cache_len=None, enc_out=None, use_pallas=use_pallas)
+    return rmsnorm(enc["final_norm"], x, cfg.norm_eps)
+
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,                    # [B, T]
+    *,
+    mode: str = "train",                  # train | prefill | decode
+    cache: Optional[Dict] = None,
+    cache_len: Optional[jax.Array] = None,  # int32[B]
+    patch_embeds: Optional[jax.Array] = None,
+    encoder_frames: Optional[jax.Array] = None,
+    use_pallas: bool = False,
+    _return_hidden: bool = False,
+    max_cache_len: Optional[int] = None,
+) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (logits | hidden, new_cache, aux_loss)."""
+    dtype = dtype_of(cfg)
+    B, T = tokens.shape
+    n_groups, n_tail, kinds = _plan(cfg)
+
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0).astype(dtype)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    if patch_embeds is not None and cfg.frontend == "vision":
+        P_ = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(dtype), x[:, P_:, :]], axis=1)
+    if mode == "decode":
+        positions = cache_len[:, None]                     # [B, 1]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    if cfg.pos_embedding == "learned":
+        x = x + learned_positions(params["embed"]["pos"], positions).astype(dtype)
+    x = constrain(x, "batch", "seq", "embed")
+
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        if encoder_frames is not None:
+            enc_out = encoder_forward(params, cfg, encoder_frames, use_pallas)
+        elif cache is not None:
+            enc_out = cache["enc_out"]
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def run_layer(lp, x, mixer, ffn, lcache):
+        return apply_layer(
+            lp, cfg, x, mixer, ffn, positions=positions, mode=mode,
+            cache=lcache, cache_len=cache_len, enc_out=enc_out,
+            use_pallas=use_pallas, max_cache_len=max_cache_len)
+
+    if n_groups:
+        has_cache_in = cache is not None
+        builds_cache = mode in ("prefill", "decode")
+
+        def group_step(carry, xs):
+            x, aux = carry
+            gparams = xs[0] if has_cache_in else xs
+            gcache = xs[1] if has_cache_in else None
+            new_gcache = []
+            for j, (mixer, ffn) in enumerate(kinds):
+                lc = gcache[j] if gcache is not None else None
+                x, nc, a = run_layer(gparams[j], x, mixer, ffn, lc)
+                aux = aux + a
+                if builds_cache:
+                    new_gcache.append(nc if nc is not None else lc)
+            return (x, aux), (new_gcache if builds_cache else 0)
+
+        step = group_step
+        if cfg.remat:
+            step = jax.checkpoint(
+                group_step,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        xs = (params["groups"], cache["groups"]) if has_cache_in \
+            else params["groups"]
+        (x, aux_total), new_group_cache = jax.lax.scan(
+            step, (x, aux_total), xs)
+    else:
+        new_group_cache = None
+
+    tail_kinds = ([cfg.layer_kind(n_groups * cfg.group_len + i)
+                   for i in range(n_tail)] if cfg.scan_layers else kinds)
+    new_tail_cache = []
+    for i, (mixer, ffn) in enumerate(tail_kinds):
+        lc = cache["tail"][i] if cache is not None else None
+        layer_fn = run_layer
+        if cfg.remat:
+            layer_fn = jax.checkpoint(
+                run_layer,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                static_argnums=(2, 3))
+        x, nc, a = layer_fn(params["tail"][i], x, mixer, ffn, lc)
+        aux_total = aux_total + a
+        new_tail_cache.append(nc if nc is not None else lc)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if _return_hidden:
+        logits = x
+    else:
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("btd,vd->btv", x, params["embed"]["tok"])
+        else:
+            logits = x @ params["lm_head"]
+        logits = softcap(logits, cfg.logit_softcap)
+        logits = constrain(logits, "batch", "seq", "vocab")
+
+    new_cache = None
+    if cache is not None or mode == "prefill":
+        new_cache = {}
+        if n_groups:
+            new_cache["groups"] = new_group_cache
+        new_cache["tail"] = new_tail_cache
+        if cfg.is_encoder_decoder and enc_out is not None:
+            new_cache["enc_out"] = enc_out
+    return logits, new_cache, aux_total

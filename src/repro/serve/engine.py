@@ -1,0 +1,142 @@
+"""Batched serving engine: continuous-batching decode over a shared cache.
+
+Request lifecycle: enqueue → prefill (one jit'd call per admission wave,
+writing into the slot's pre-allocated max-length cache) → step the whole
+active batch with one fused decode step per token → stream tokens out →
+free the slot on EOS/limit.  Greedy or temperature sampling.
+
+Single-host execution here; the decode step is the same function the
+dry-run lowers for the 256/512-chip meshes, so the sharded path is
+covered by launch/dryrun.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import build_model
+from ..models.transformer import init_decode_cache
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # int32[T]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 max_len: int = 256, temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.temperature = temperature
+        self.rng = jax.random.key(seed)
+        self.cache = init_decode_cache(cfg, max_batch, max_len)
+        self.cache_len = jnp.zeros((max_batch,), jnp.int32)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self._decode = jax.jit(self.model.decode_step)
+        self._next_rid = 0
+
+    # ------------------------------------------------------------- frontend
+    def submit(self, prompt: np.ndarray, **kw) -> Request:
+        req = Request(self._next_rid, np.asarray(prompt, np.int32), **kw)
+        self._next_rid += 1
+        self.queue.append(req)
+        return req
+
+    # ------------------------------------------------------------ admission
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            self.slots[slot] = req
+            T = len(req.prompt)
+            logits, pf_cache = self.model.prefill_step(
+                self.params, {"tokens": jnp.asarray(req.prompt[None, :])},
+                max_len=self.max_len)
+            self.cache = _splice_cache(self.cache, pf_cache, slot)
+            self.cache_len = self.cache_len.at[slot].set(T)
+            tok = self._sample(logits[0])
+            req.out_tokens.append(int(tok))
+
+    def _sample(self, logits: jax.Array) -> int:
+        if self.temperature <= 0:
+            return int(jnp.argmax(logits, -1))
+        self.rng, sub = jax.random.split(self.rng)
+        return int(jax.random.categorical(sub, logits / self.temperature))
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> int:
+        """One engine iteration: admit, decode one token for every active
+        slot, retire finished requests.  Returns #active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        last = np.zeros((self.max_batch, 1), np.int32)
+        for i in active:
+            last[i, 0] = self.slots[i].out_tokens[-1]
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(last), self.cache_len)
+        self.cache_len = self.cache_len + jnp.asarray(
+            [1 if self.slots[i] is not None else 0
+             for i in range(self.max_batch)], jnp.int32)
+        for i in active:
+            req = self.slots[i]
+            tok = self._sample(logits[i])
+            req.out_tokens.append(tok)
+            limit = req.max_new_tokens
+            if (req.eos_id is not None and tok == req.eos_id) or \
+                    len(req.out_tokens) >= limit:
+                req.done = True
+                self.slots[i] = None
+        return len(active)
+
+    def run_until_drained(self, max_iters: int = 10_000) -> None:
+        it = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and it < max_iters:
+            self.step()
+            it += 1
+
+
+def _splice_cache(cache, pf_cache, slot: int):
+    """Insert a prefilled single-request cache into batch position ``slot``.
+
+    Grouped (scan-stacked) cache leaves carry [n_groups, B, ...]; tail and
+    enc_out leaves carry [B, ...] — the batch axis index comes from the path.
+    """
+    def visit(path, buf, new):
+        if not hasattr(buf, "ndim") or buf.ndim == 0:
+            return buf
+        head = str(getattr(path[0], "key", getattr(path[0], "idx", path[0])))
+        baxis = 1 if head == "groups" else 0
+        n = new
+        for axis in range(buf.ndim):
+            if axis == baxis:
+                continue
+            if n.shape[axis] < buf.shape[axis]:
+                width = [(0, 0)] * n.ndim
+                width[axis] = (0, buf.shape[axis] - n.shape[axis])
+                n = jnp.pad(n, width)
+            elif n.shape[axis] > buf.shape[axis]:
+                n = jax.lax.slice_in_dim(n, 0, buf.shape[axis], axis=axis)
+        idx = [slice(None)] * buf.ndim
+        idx[baxis] = slice(slot, slot + 1)
+        return buf.at[tuple(idx)].set(n.astype(buf.dtype))
+
+    return jax.tree_util.tree_map_with_path(visit, cache, pf_cache)

@@ -1,0 +1,71 @@
+"""Order-preserving tuple -> bytes key codec.
+
+leveldb (and our LSM stand-in) orders keys lexicographically by raw bytes.
+Bigset requires element-keys to sort by ``(set, kind, element, actor,
+counter)`` so that (a) a set's keyspace is one contiguous range, (b) the
+clock/tombstone keys sort *before* the element keys of the same set, and
+(c) element keys sort by element then dot — the property that enables the
+§4.4 streaming ORSWOT join and range queries.
+
+Components supported: ``bytes``/``str`` (escaped, terminator-based) and
+non-negative ``int`` (fixed 8-byte big-endian).  Escaping maps ``0x00`` to
+``0x00 0x01`` and terminates with ``0x00 0x00``, preserving order.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Tuple
+
+_STR_TAG = b"\x01"
+_INT_TAG = b"\x02"
+_TERM = b"\x00\x00"
+_ESC = b"\x00\x01"
+
+
+def encode_key(parts: Tuple) -> bytes:
+    out = bytearray()
+    for p in parts:
+        if isinstance(p, str):
+            p = p.encode("utf-8")
+        if isinstance(p, (bytes, bytearray)):
+            out += _STR_TAG
+            out += bytes(p).replace(b"\x00", _ESC)
+            out += _TERM
+        elif isinstance(p, int):
+            if p < 0 or p >= 1 << 64:
+                raise ValueError(f"int key component out of range: {p}")
+            out += _INT_TAG
+            out += struct.pack(">Q", p)
+        else:
+            raise TypeError(f"unsupported key component type: {type(p)!r}")
+    return bytes(out)
+
+
+def decode_key(key: bytes) -> Tuple:
+    parts = []
+    i = 0
+    n = len(key)
+    while i < n:
+        tag = key[i : i + 1]
+        i += 1
+        if tag == _STR_TAG:
+            buf = bytearray()
+            while True:
+                j = key.index(b"\x00", i)
+                nxt = key[j : j + 2]
+                if nxt == _TERM:
+                    buf += key[i:j]
+                    i = j + 2
+                    break
+                elif nxt == _ESC:
+                    buf += key[i:j] + b"\x00"
+                    i = j + 2
+                else:
+                    raise ValueError("malformed escaped string in key")
+            parts.append(bytes(buf))
+        elif tag == _INT_TAG:
+            parts.append(struct.unpack(">Q", key[i : i + 8])[0])
+            i += 8
+        else:
+            raise ValueError(f"bad tag byte {tag!r} at offset {i - 1}")
+    return tuple(parts)

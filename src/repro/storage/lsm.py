@@ -1,0 +1,222 @@
+"""LSM-tree ordered KV store — a faithful-enough leveldb stand-in.
+
+Structure: an in-memory *memtable* (dict) backed by a write-ahead log for
+atomic batches, flushed into immutable sorted *runs* (sstables).  Reads
+consult memtable then runs newest-first; scans merge all levels.  Compaction
+merges runs and applies a caller-supplied ``drop`` predicate — this is the
+hook the paper adds to leveldb so the set-tombstone can discard superseded
+element-keys without ever issuing deletes (§4.3.3).
+
+Every operation is metered in :class:`IoStats` (bytes read / written /
+transferred), because the paper's central claim is about **bytes read and
+written over the life of the set** (§2.1: O(n) per op, O(n²) lifetime for
+riak-objects vs O(causal metadata) for bigset).
+"""
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+TOMBSTONE = b"\xff\xfe__deleted__"  # storage-level delete marker
+
+
+@dataclass
+class IoStats:
+    bytes_written: int = 0      # WAL + memtable writes (foreground)
+    bytes_read: int = 0         # get/scan bytes returned + keys touched
+    bytes_flushed: int = 0      # memtable -> run
+    bytes_compacted: int = 0    # compaction rewrite volume
+    num_writes: int = 0
+    num_reads: int = 0
+    num_seeks: int = 0
+
+    def snapshot(self) -> "IoStats":
+        return IoStats(**vars(self))
+
+    def delta(self, since: "IoStats") -> "IoStats":
+        return IoStats(**{k: getattr(self, k) - getattr(since, k) for k in vars(self)})
+
+    def total_io(self) -> int:
+        return self.bytes_written + self.bytes_read
+
+
+class _Run:
+    """Immutable sorted run of (key, value) pairs."""
+
+    __slots__ = ("keys", "values")
+
+    def __init__(self, items: List[Tuple[bytes, bytes]]):
+        self.keys = [k for k, _ in items]
+        self.values = [v for _, v in items]
+
+    def get(self, key: bytes) -> Optional[bytes]:
+        i = bisect.bisect_left(self.keys, key)
+        if i < len(self.keys) and self.keys[i] == key:
+            return self.values[i]
+        return None
+
+    def scan(self, lo: bytes, hi: bytes) -> Iterator[Tuple[bytes, bytes]]:
+        i = bisect.bisect_left(self.keys, lo)
+        while i < len(self.keys) and self.keys[i] < hi:
+            yield self.keys[i], self.values[i]
+            i += 1
+
+    def __len__(self) -> int:
+        return len(self.keys)
+
+
+class LsmStore:
+    """Ordered KV store with memtable + sorted runs + pluggable compaction."""
+
+    def __init__(self, memtable_limit: int = 4096, auto_compact_runs: int = 8):
+        self.memtable: Dict[bytes, bytes] = {}
+        self.runs: List[_Run] = []  # newest first
+        self.stats = IoStats()
+        self.memtable_limit = memtable_limit
+        self.auto_compact_runs = auto_compact_runs
+        # drop(key, value) -> bool: True to discard during compaction.
+        # Set by the bigset layer (the paper's modified-leveldb hook).
+        self.compaction_filter: Optional[Callable[[bytes, bytes], bool]] = None
+        self.on_discard: Optional[Callable[[bytes, bytes], None]] = None
+        self._compacting = False
+
+    # ----------------------------------------------------------------- write
+    def put_batch(self, items: List[Tuple[bytes, bytes]]) -> None:
+        """Atomic write batch (WAL append then memtable apply)."""
+        for k, v in items:
+            self.stats.bytes_written += len(k) + len(v)
+            self.memtable[k] = v
+        self.stats.num_writes += 1
+        if len(self.memtable) >= self.memtable_limit:
+            self.flush()
+
+    def put(self, key: bytes, value: bytes) -> None:
+        self.put_batch([(key, value)])
+
+    def delete(self, key: bytes) -> None:
+        self.put_batch([(key, TOMBSTONE)])
+
+    # ------------------------------------------------------------------ read
+    def get(self, key: bytes) -> Optional[bytes]:
+        self.stats.num_reads += 1
+        v = self.memtable.get(key)
+        if v is None:
+            for run in self.runs:
+                v = run.get(key)
+                if v is not None:
+                    break
+        if v is None or v == TOMBSTONE:
+            self.stats.bytes_read += len(key)
+            return None
+        self.stats.bytes_read += len(key) + len(v)
+        return v
+
+    def scan(self, lo: bytes, hi: bytes) -> Iterator[Tuple[bytes, bytes]]:
+        """Merged iterator over [lo, hi); newest level wins per key."""
+        self.stats.num_seeks += 1
+        mem = sorted(
+            (k, v) for k, v in self.memtable.items() if lo <= k < hi
+        )
+        levels: List[Iterator[Tuple[bytes, bytes]]] = [iter(mem)]
+        levels += [run.scan(lo, hi) for run in self.runs]
+        yield from self._merge(levels)
+
+    def _merge(
+        self, levels: List[Iterator[Tuple[bytes, bytes]]]
+    ) -> Iterator[Tuple[bytes, bytes]]:
+        import heapq
+
+        heap: List[Tuple[bytes, int, bytes]] = []
+        iters = levels
+        for idx, it in enumerate(iters):
+            for k, v in it:
+                heap.append((k, idx, v))
+                break
+        heapq.heapify(heap)
+        last_key: Optional[bytes] = None
+        while heap:
+            k, idx, v = heapq.heappop(heap)
+            nxt = next(iters[idx], None)
+            if nxt is not None:
+                heapq.heappush(heap, (nxt[0], idx, nxt[1]))
+            if k == last_key:
+                continue  # older level shadowed
+            last_key = k
+            if v == TOMBSTONE:
+                continue
+            self.stats.bytes_read += len(k) + len(v)
+            yield k, v
+
+    # ------------------------------------------------------------ level mgmt
+    def flush(self) -> None:
+        if not self.memtable:
+            return
+        items = sorted(self.memtable.items())
+        self.stats.bytes_flushed += sum(len(k) + len(v) for k, v in items)
+        self.runs.insert(0, _Run(items))
+        self.memtable = {}
+        if len(self.runs) >= self.auto_compact_runs and not self._compacting:
+            self.compact()
+
+    def compact(self) -> List[Tuple[bytes, bytes]]:
+        """Merge all levels into one run, applying the compaction filter.
+
+        Returns the list of (key, value) pairs *discarded by the filter*
+        (storage tombstones are dropped silently).  The bigset layer uses the
+        returned dots to shrink the set-tombstone (§4.3.3).
+        """
+        self._compacting = True
+        try:
+            return self._compact_inner()
+        finally:
+            self._compacting = False
+
+    def _compact_inner(self) -> List[Tuple[bytes, bytes]]:
+        self.flush()
+        merged: List[Tuple[bytes, bytes]] = []
+        discarded: List[Tuple[bytes, bytes]] = []
+        seen_keys: set = set()
+        flt = self.compaction_filter
+        # newest-first iteration; first occurrence of a key wins
+        for run in self.runs:
+            for k, v in zip(run.keys, run.values):
+                if k in seen_keys:
+                    continue
+                seen_keys.add(k)
+                self.stats.bytes_compacted += len(k) + len(v)
+                if v == TOMBSTONE:
+                    continue
+                if flt is not None and flt(k, v):
+                    discarded.append((k, v))
+                    if self.on_discard is not None:
+                        self.on_discard(k, v)
+                    continue
+                merged.append((k, v))
+        merged.sort()
+        self.stats.bytes_compacted += sum(len(k) + len(v) for k, v in merged)
+        self.runs = [_Run(merged)] if merged else []
+        return discarded
+
+    # ------------------------------------------------------------- inspection
+    def __len__(self) -> int:
+        n = 0
+        seen: set = set()
+        for k, v in self.memtable.items():
+            seen.add(k)
+            if v != TOMBSTONE:
+                n += 1
+        for run in self.runs:
+            for k, v in zip(run.keys, run.values):
+                if k in seen:
+                    continue
+                seen.add(k)
+                if v != TOMBSTONE:
+                    n += 1
+        return n
+
+    def approximate_bytes(self) -> int:
+        total = sum(len(k) + len(v) for k, v in self.memtable.items())
+        for run in self.runs:
+            total += sum(len(k) + len(v) for k, v in zip(run.keys, run.values))
+        return total

@@ -1,0 +1,121 @@
+"""Sharded AdamW with configurable optimizer-state memory policies.
+
+Policies (``ModelConfig.optimizer_moments``) — the HBM table in DESIGN.md §5:
+
+* ``fp32``     — m, v in fp32 (12 B/param of state): default for ≤30B archs.
+* ``bf16``     — m, v in bf16 (4 B/param): mid-size fallback.
+* ``factored`` — m in bf16, v rank-1 factored à la Adafactor (row+col fp32,
+  ~0 B/param): required for the 123B/314B/398B cells to fit 16 GB/chip on
+  the single-pod mesh.
+
+Optimizer state inherits each parameter's sharding (ZeRO-style: the state
+lives wherever the param shard lives; with 2D-sharded params the state is
+fully distributed).  Updates compute in fp32 regardless of storage dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moments: str = "fp32"          # fp32 | bf16 | factored
+    grad_clip: float = 1.0
+
+
+def _factored(leaf: jax.Array) -> bool:
+    return leaf.ndim >= 2 and leaf.shape[-1] >= 8 and leaf.shape[-2] >= 8
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    mdt = jnp.float32 if cfg.moments == "fp32" else jnp.bfloat16
+
+    def init_leaf(p):
+        st = {"m": jnp.zeros(p.shape, mdt)}
+        if cfg.moments == "factored" and _factored(p):
+            st["v_row"] = jnp.zeros(p.shape[:-1], jnp.float32)
+            st["v_col"] = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        else:
+            vdt = jnp.float32 if cfg.moments != "bf16" else jnp.bfloat16
+            st["v"] = jnp.zeros(p.shape, vdt)
+        return st
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree_util.tree_map(init_leaf, params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(
+    grads, opt_state, params, cfg: AdamWConfig,
+) -> Tuple[Any, Dict[str, Any]]:
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, st):
+        g = g.astype(jnp.float32) * clip
+        m = st["m"].astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        new_st = {"m": m.astype(st["m"].dtype)}
+        if "v" in st:
+            v = st["v"].astype(jnp.float32) * cfg.b2 + g * g * (1 - cfg.b2)
+            new_st["v"] = v.astype(st["v"].dtype)
+            v_hat = v / b2c
+        else:
+            g2 = g * g
+            v_row = st["v_row"] * cfg.b2 + g2.mean(-1) * (1 - cfg.b2)
+            v_col = st["v_col"] * cfg.b2 + g2.mean(-2) * (1 - cfg.b2)
+            new_st["v_row"] = v_row
+            new_st["v_col"] = v_col
+            denom = jnp.maximum(v_row.mean(-1, keepdims=True), 1e-30)[..., None]
+            v_hat = (v_row[..., None] * v_col[..., None, :] / denom) / b2c
+        m_hat = m / b1c
+        pf = p.astype(jnp.float32)
+        new_p = pf - cfg.lr * (m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+                               + cfg.weight_decay * pf)
+        return new_p.astype(p.dtype), new_st
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(opt_state["mu"])
+    out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    return new_params, {"step": step, "mu": new_mu}
+
+
+def opt_state_pspecs(opt_state, param_pspecs):
+    """Optimizer state shardings mirror parameter shardings."""
+    from jax.sharding import PartitionSpec as P
+
+    def leaf_spec(st, ps):
+        out = {"m": ps}
+        if "v" in st:
+            out["v"] = ps
+        else:
+            sub = list(ps) if ps else []
+            sub = sub + [None] * (st["m"].ndim - len(sub))
+            out["v_row"] = P(*sub[:-1]) if len(sub) > 1 else P()
+            out["v_col"] = P(*(sub[:-2] + sub[-1:])) if len(sub) > 1 else P()
+        return out
+
+    mu = jax.tree_util.tree_map(
+        leaf_spec, opt_state["mu"], param_pspecs,
+        is_leaf=lambda x: isinstance(x, dict) and "m" in x)
+    return {"step": P(), "mu": mu}

@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward +
+one train step on CPU, asserting output shapes and finiteness (deliverable f)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.models import build_model
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def make_batch(cfg, rng, B=2, T=16):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T + 1)),
+                                   jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_patches, cfg.d_model)), jnp.float32)
+    if cfg.is_encoder_decoder:
+        batch["encoder_frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_positions, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+class TestSmoke:
+    def test_forward_and_train_step(self, arch):
+        cfg = smoke_config(arch)
+        model = build_model(cfg)
+        rng = np.random.default_rng(0)
+        state = model.init_train_state(jax.random.key(0))
+        batch = make_batch(cfg, rng)
+        loss0 = model.loss_fn(state.params, batch)
+        assert np.isfinite(float(loss0)), f"{arch}: non-finite initial loss"
+        step = jax.jit(model.train_step)
+        state, metrics = step(state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+        # one more step must change the loss (optimizer actually applied)
+        state, m2 = step(state, batch)
+        assert float(m2["loss"]) != float(metrics["loss"])
+        assert int(m2["step"]) == 2
+
+    def test_prefill_then_decode(self, arch):
+        cfg = smoke_config(arch)
+        model = build_model(cfg)
+        rng = np.random.default_rng(1)
+        params = model.init(jax.random.key(1))
+        B, T = 2, 16
+        batch = make_batch(cfg, rng, B, T)
+        prompt = batch["tokens"][:, :T]
+        pf_batch = dict(batch, tokens=prompt)
+        logits, cache = model.prefill_step(params, pf_batch)
+        assert logits.shape == (B, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        # decode cache shapes must admit continuation; re-init a decode cache
+        # of capacity T+4 and replay the prompt via decode for equivalence
+        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        cache_len = jnp.full((B,), T, jnp.int32)
+        d_logits, _ = model.decode_step(params, cache, nxt, cache_len)
+        assert d_logits.shape == (B, cfg.vocab_size)
+        assert np.isfinite(np.asarray(d_logits, np.float32)).all()
+
+
+class TestDecodeConsistency:
+    """Token-by-token decode must match teacher-forced forward."""
+
+    @pytest.mark.parametrize("arch", ["gemma-7b", "gemma3-27b",
+                                      "falcon-mamba-7b",
+                                      "jamba-1.5-large-398b",
+                                      "granite-moe-1b-a400m"])
+    def test_decode_matches_forward(self, arch):
+        cfg = smoke_config(arch).replace(kv_cache_dtype="bfloat16")
+        if cfg.n_experts:
+            # dropless capacity: capacity dropping is shape-dependent (a
+            # full-sequence pass drops over-capacity tokens that a 1-token
+            # decode keeps), so exact equivalence needs cf >= E/K
+            cfg = cfg.replace(
+                capacity_factor=cfg.n_experts / cfg.experts_per_token)
+        model = build_model(cfg)
+        rng = np.random.default_rng(2)
+        params = model.init(jax.random.key(2))
+        B, T = 1, 12
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+
+        # teacher-forced logits at the last position
+        from repro.models.transformer import forward
+        from repro.models.model import _logits
+        hid, _, _ = forward(params, cfg, tokens, mode="train",
+                            _return_hidden=True)
+        want = _logits(params, cfg, hid[:, -1:, :])[:, 0]
+
+        # prefill T-1 then decode token T-1
+        logits_p, cache = model.prefill_step(params, {"tokens": tokens[:, :T - 1]})
+        got, _ = model.decode_step(params, cache, tokens[:, T - 1:T],
+                                   jnp.full((B,), T - 1, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=2e-2, rtol=2e-2)
+
+
+class TestConfigs:
+    @pytest.mark.parametrize("arch", ALL_ARCHS)
+    def test_full_config_matches_assignment(self, arch):
+        cfg = get_config(arch)
+        expected = {
+            "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+            "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+            "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+            "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+            "falcon-mamba-7b": (64, 4096, 0, 0, 0, 65024),
+            "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+            "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+            "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+            "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+            "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+        }[arch]
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == expected
+
+    def test_param_counts_plausible(self):
+        # order-of-magnitude sanity for the billion-scale archs
+        assert 6e9 < get_config("gemma-7b").n_params() < 10e9
+        assert 3e9 < get_config("minitron-4b").n_params() < 6e9
+        assert 250e9 < get_config("grok-1-314b").n_params() < 380e9
+        assert 330e9 < get_config("jamba-1.5-large-398b").n_params() < 480e9
+        assert 100e9 < get_config("mistral-large-123b").n_params() < 150e9
+        g = get_config("granite-moe-1b-a400m")
+        assert 0.8e9 < g.n_params() < 2e9
+        assert g.n_active_params() < 0.6e9
+
+    def test_layer_patterns(self):
+        j = get_config("jamba-1.5-large-398b")
+        kinds = [j.layer_kind(i) for i in range(8)]
+        assert [m for m, _ in kinds].count("attn") == 1
+        assert kinds[4][0] == "attn"
+        assert [f for _, f in kinds].count("moe") == 4
+        g = get_config("gemma3-27b")
+        kg = [g.layer_kind(i)[0] for i in range(6)]
+        assert kg == ["attn_local"] * 5 + ["attn_global"]

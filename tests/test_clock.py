@@ -1,0 +1,118 @@
+"""Property tests for the BaseVV+DotCloud logical clock (paper §4.1)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clock import Clock
+from repro.core.dots import Dot
+
+ACTORS = ["a", "b", "c", "d"]
+
+dots_st = st.lists(
+    st.tuples(st.sampled_from(ACTORS), st.integers(1, 12)).map(lambda t: Dot(*t)),
+    max_size=24,
+)
+
+
+def clock_of(dots):
+    return Clock.zero().add_dots(dots)
+
+
+clock_st = dots_st.map(clock_of)
+
+
+class TestBasics:
+    def test_zero(self):
+        z = Clock.zero()
+        assert z.is_zero()
+        assert not z.seen(Dot("a", 1))
+
+    def test_increment_contiguous(self):
+        c, d1 = Clock.zero().increment("a")
+        assert d1 == Dot("a", 1)
+        c, d2 = c.increment("a")
+        assert d2 == Dot("a", 2)
+        assert c.base == {"a": 2} and not c.cloud
+
+    def test_add_gap_goes_to_cloud(self):
+        c = Clock.zero().add(Dot("a", 3))
+        assert c.base.get("a", 0) == 0
+        assert 3 in c.cloud["a"]
+        assert c.seen(Dot("a", 3)) and not c.seen(Dot("a", 1))
+
+    def test_cloud_compresses_into_base(self):
+        c = clock_of([Dot("a", 2), Dot("a", 3), Dot("a", 1)])
+        assert c.base == {"a": 3} and not c.cloud
+
+    def test_no_self_cloud_entry_invariant(self):
+        # a coordinator that somehow saw its own future dot must not increment
+        c = Clock.zero().add(Dot("a", 2))
+        with pytest.raises(ValueError):
+            c.increment("a")
+
+
+class TestSemilattice:
+    @given(clock_st, clock_st)
+    def test_join_commutative(self, x, y):
+        assert x.join(y) == y.join(x)
+
+    @given(clock_st, clock_st, clock_st)
+    @settings(max_examples=60)
+    def test_join_associative(self, x, y, z):
+        assert x.join(y).join(z) == x.join(y.join(z))
+
+    @given(clock_st)
+    def test_join_idempotent(self, x):
+        assert x.join(x) == x
+
+    @given(clock_st, clock_st)
+    def test_join_is_lub(self, x, y):
+        j = x.join(y)
+        assert j.descends(x) and j.descends(y)
+
+    @given(dots_st, dots_st)
+    def test_seen_after_join(self, da, db):
+        j = clock_of(da).join(clock_of(db))
+        for d in da + db:
+            assert j.seen(d)
+
+    @given(clock_st, clock_st)
+    def test_descends_antisymmetry(self, x, y):
+        if x.descends(y) and y.descends(x):
+            assert x == y
+
+
+class TestSubtract:
+    @given(dots_st, dots_st)
+    def test_subtract_removes_exactly(self, base_dots, gone):
+        c = clock_of(base_dots)
+        s = c.subtract(gone)
+        gone_set = set(gone)
+        for d in c.all_dots():
+            assert s.seen(d) == (d not in gone_set)
+
+    @given(dots_st)
+    def test_subtract_everything_is_zero(self, dots):
+        c = clock_of(dots)
+        assert c.subtract(c.all_dots()).is_zero()
+
+    @given(dots_st, dots_st)
+    def test_subtract_then_add_roundtrip(self, dots, gone):
+        c = clock_of(dots)
+        present_gone = [d for d in gone if c.seen(d)]
+        s = c.subtract(gone).add_dots(present_gone)
+        assert s == c
+
+
+class TestDotsEnumeration:
+    @given(dots_st)
+    def test_all_dots_matches_seen(self, dots):
+        c = clock_of(dots)
+        assert set(c.all_dots()) == {d for d in set(dots) if c.seen(d)}
+        # and every enumerated dot is seen
+        for d in c.all_dots():
+            assert c.seen(d)
+
+    @given(dots_st)
+    def test_obj_roundtrip(self, dots):
+        c = clock_of(dots)
+        assert Clock.from_obj(c.to_obj()) == c

@@ -1,0 +1,64 @@
+"""Dry-run machinery unit tests (collective parsing, rules, specs) — the
+full 512-device sweep runs via launch/dryrun.py; here we validate the
+analysis plumbing on synthetic HLO and a subprocess smoke cell."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.launch.dryrun import parse_collectives
+from repro.launch.mesh import HW
+
+HLO = """
+  %all-reduce.1 = f32[32,64]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups=[4,2]<=[2,4]T(1,0), use_global_device_ids=true, to_apply=%add
+  %ag = bf16[128,256]{1,0} all-gather(%p0), channel_id=2, replica_groups=[16,16]<=[256], dimensions={0}
+  %rs = bf16[8,256]{1,0} reduce-scatter(%p1), channel_id=3, replica_groups=[16,16]<=[256], to_apply=%add
+  %cp = f32[64]{0} collective-permute(%p2), source_target_pairs={{0,1}}
+  %aa = bf16[4,4]{1,0} all-to-all(%p3), replica_groups={{0,1,2,3}}
+"""
+
+
+class TestCollectiveParse:
+    def test_parses_all_ops(self):
+        colls = parse_collectives(HLO)
+        ops = sorted(c["op"] for c in colls)
+        assert ops == ["all-gather", "all-reduce", "all-to-all",
+                       "collective-permute", "reduce-scatter"]
+
+    def test_ring_cost_model(self):
+        colls = {c["op"]: c for c in parse_collectives(HLO)}
+        ar = colls["all-reduce"]
+        assert ar["group"] == 2
+        assert ar["result_bytes"] == 32 * 64 * 4
+        assert ar["moved_bytes"] == pytest.approx(2 * 32 * 64 * 4 * 0.5)
+        ag = colls["all-gather"]
+        assert ag["group"] == 16
+        assert ag["moved_bytes"] == pytest.approx(128 * 256 * 2 * 15 / 16)
+        rs = colls["reduce-scatter"]
+        assert rs["moved_bytes"] == pytest.approx(8 * 256 * 2 * 15)
+        assert colls["all-to-all"]["group"] == 4
+
+    def test_hw_constants(self):
+        assert HW["peak_flops_bf16"] == 197e12
+        assert HW["hbm_bw"] == 819e9
+
+
+class TestArtifacts:
+    ART = Path(__file__).resolve().parents[1] / "benchmarks" / "artifacts" / "dryrun"
+
+    def test_existing_artifacts_are_wellformed(self):
+        if not self.ART.exists():
+            pytest.skip("no dry-run artifacts yet")
+        recs = [json.loads(p.read_text()) for p in self.ART.glob("*.json")]
+        if not recs:
+            pytest.skip("no dry-run artifacts yet")
+        for r in recs:
+            assert "arch" in r and "shape" in r
+            if "skipped" in r:
+                continue
+            rl = r["roofline"]
+            assert rl["t_compute_s"] >= 0 and rl["t_memory_s"] > 0
+            assert rl["dominant"] in ("compute", "memory", "collective")
+            assert 0 <= rl["roofline_fraction"] <= 1.2

@@ -1,0 +1,213 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle,
+swept over shapes and dtypes, plus vclock dense/sparse agreement."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.core import vclock
+from repro.core.clock import Clock
+from repro.core.dots import Dot
+from repro.kernels.clock_ops import kernel as ck, ref as cr
+from repro.kernels.decode_attention import decode_attention_pallas, decode_attention_ref
+from repro.kernels.dot_seen import dot_seen_pallas, dot_seen_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention_pallas
+from repro.kernels.mamba_scan import mamba_scan_pallas, mamba_scan_ref, mamba_step_ref
+
+RNG = np.random.default_rng(0)
+
+
+# --------------------------------------------------------------------- vclock
+class TestVClock:
+    @given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 90)), max_size=40))
+    @settings(max_examples=60, deadline=None)
+    def test_dense_seen_matches_sparse(self, dots):
+        actors = ["a", "b", "c", "d"]
+        sparse = Clock.zero().add_dots(Dot(actors[a], c) for a, c in dots)
+        dense = vclock.from_clock(sparse, {a: i for i, a in enumerate(actors)}, 4, 4)
+        probe_a = np.array([a for a, _ in dots] + [0, 1, 2, 3], np.int32)
+        probe_c = np.array([c for _, c in dots] + [1, 64, 90, 128], np.int32)
+        got = np.asarray(vclock.dots_seen(dense, jnp.asarray(probe_a), jnp.asarray(probe_c)))
+        want = np.array([sparse.seen(Dot(actors[a], int(c)))
+                         for a, c in zip(probe_a, probe_c)])
+        assert (got == want).all()
+
+    @given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 120)), max_size=40))
+    @settings(max_examples=50, deadline=None)
+    def test_roundtrip_sparse_dense_sparse(self, dots):
+        actors = ["a", "b", "c", "d"]
+        sparse = Clock.zero().add_dots(Dot(actors[a], c) for a, c in dots)
+        dense = vclock.from_clock(sparse, {a: i for i, a in enumerate(actors)}, 4, 4)
+        assert vclock.to_clock(dense, actors) == sparse
+
+    @given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 100)), max_size=30),
+           st.lists(st.tuples(st.integers(0, 3), st.integers(1, 100)), max_size=30))
+    @settings(max_examples=40, deadline=None)
+    def test_dense_join_matches_sparse(self, d1, d2):
+        actors = ["a", "b", "c", "d"]
+        idx = {a: i for i, a in enumerate(actors)}
+        s1 = Clock.zero().add_dots(Dot(actors[a], c) for a, c in d1)
+        s2 = Clock.zero().add_dots(Dot(actors[a], c) for a, c in d2)
+        j = vclock.join(vclock.from_clock(s1, idx, 4, 4),
+                        vclock.from_clock(s2, idx, 4, 4))
+        assert vclock.to_clock(j, actors) == s1.join(s2)
+
+    def test_compress_folds_prefix(self):
+        dense = vclock.zero(2, 2)
+        dense = vclock.add_dots(dense, jnp.array([0] * 40, jnp.int32),
+                                jnp.arange(1, 41, dtype=jnp.int32))
+        c = vclock.compress(dense)
+        assert int(c.origin[0]) == 40 and int(c.origin[1]) == 0
+        assert int(c.bits.sum()) == 0
+
+    def test_compress_stops_at_gap(self):
+        dense = vclock.zero(1, 2)
+        cs = jnp.array([1, 2, 3, 5, 6], jnp.int32)
+        dense = vclock.add_dots(dense, jnp.zeros(5, jnp.int32), cs)
+        c = vclock.compress(dense)
+        assert int(c.origin[0]) == 3
+        got = vclock.dots_seen(c, jnp.zeros(6, jnp.int32),
+                               jnp.array([1, 2, 3, 4, 5, 6], jnp.int32))
+        assert np.asarray(got).tolist() == [True, True, True, False, True, True]
+
+
+# ------------------------------------------------------------------- dot_seen
+class TestDotSeenKernel:
+    @pytest.mark.parametrize("n_actors,n_words,n_dots,block_n", [
+        (4, 8, 64, 32),
+        (16, 32, 1000, 256),
+        (128, 64, 4096, 1024),
+        (3, 2, 17, 64),     # ragged: pad path
+    ])
+    def test_matches_ref(self, n_actors, n_words, n_dots, block_n):
+        origin = jnp.asarray(RNG.integers(0, 50, n_actors), jnp.int32)
+        bits = jnp.asarray(
+            RNG.integers(0, 1 << 32, (n_actors, n_words), dtype=np.uint64)
+            .astype(np.uint32))
+        actors = jnp.asarray(RNG.integers(0, n_actors, n_dots), jnp.int32)
+        counters = jnp.asarray(RNG.integers(1, n_words * 32 + 80, n_dots), jnp.int32)
+        got = dot_seen_pallas(origin, bits, actors, counters, block_n=block_n)
+        want = dot_seen_ref(origin, bits, actors, counters)
+        assert (np.asarray(got) == np.asarray(want)).all()
+
+    def test_extremes(self):
+        origin = jnp.array([0, 1000], jnp.int32)
+        bits = jnp.zeros((2, 4), jnp.uint32).at[0, 3].set(0x80000000)
+        actors = jnp.array([0, 0, 1, 1], jnp.int32)
+        counters = jnp.array([128, 127, 1000, 1001], jnp.int32)
+        got = dot_seen_pallas(origin, bits, actors, counters, block_n=32)
+        assert np.asarray(got).tolist() == [True, False, True, False]
+
+
+# ------------------------------------------------------------------ clock_ops
+class TestClockOpsKernels:
+    @pytest.mark.parametrize("a_shape", [(4, 16), (8, 512), (13, 100)])
+    def test_join_subtract_popcount(self, a_shape):
+        a = jnp.asarray(RNG.integers(0, 1 << 32, a_shape, dtype=np.uint64).astype(np.uint32))
+        b = jnp.asarray(RNG.integers(0, 1 << 32, a_shape, dtype=np.uint64).astype(np.uint32))
+        assert (np.asarray(ck.join_pallas(a, b)) == np.asarray(cr.join_ref(a, b))).all()
+        assert (np.asarray(ck.subtract_pallas(a, b)) == np.asarray(cr.subtract_ref(a, b))).all()
+        assert (np.asarray(ck.popcount_pallas(a)) == np.asarray(cr.popcount_ref(a))).all()
+
+
+# ------------------------------------------------------------ flash attention
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,Hq,Hkv,T,D,dtype", [
+        (1, 2, 2, 128, 64, jnp.float32),
+        (2, 4, 2, 256, 64, jnp.float32),   # GQA group 2
+        (1, 8, 1, 128, 128, jnp.float32),  # MQA-ish
+        (1, 2, 2, 256, 128, jnp.bfloat16),
+    ])
+    def test_causal_matches_ref(self, B, Hq, Hkv, T, D, dtype):
+        q = jnp.asarray(RNG.standard_normal((B, Hq, T, D)), dtype)
+        k = jnp.asarray(RNG.standard_normal((B, Hkv, T, D)), dtype)
+        v = jnp.asarray(RNG.standard_normal((B, Hkv, T, D)), dtype)
+        got = flash_attention_pallas(q, k, v, causal=True, block_q=64, block_kv=64)
+        want = attention_ref(q, k, v, causal=True)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                        atol=tol, rtol=tol)
+
+    @pytest.mark.parametrize("window", [64, 128, 999])
+    def test_sliding_window(self, window):
+        B, H, T, D = 1, 2, 256, 64
+        q = jnp.asarray(RNG.standard_normal((B, H, T, D)), jnp.float32)
+        k = jnp.asarray(RNG.standard_normal((B, H, T, D)), jnp.float32)
+        v = jnp.asarray(RNG.standard_normal((B, H, T, D)), jnp.float32)
+        got = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                     block_q=64, block_kv=64)
+        want = attention_ref(q, k, v, causal=True, window=window)
+        assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+    def test_noncausal(self):
+        B, H, T, D = 1, 1, 128, 64
+        q = jnp.asarray(RNG.standard_normal((B, H, T, D)), jnp.float32)
+        k = jnp.asarray(RNG.standard_normal((B, H, T, D)), jnp.float32)
+        v = jnp.asarray(RNG.standard_normal((B, H, T, D)), jnp.float32)
+        got = flash_attention_pallas(q, k, v, causal=False, block_q=64, block_kv=64)
+        want = attention_ref(q, k, v, causal=False)
+        assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------ decode attention
+class TestDecodeAttention:
+    @pytest.mark.parametrize("B,Hq,Hkv,S,D,dtype", [
+        (2, 4, 4, 256, 64, jnp.float32),
+        (1, 8, 2, 512, 64, jnp.float32),   # GQA group 4
+        (2, 4, 1, 256, 128, jnp.bfloat16),
+    ])
+    def test_matches_ref(self, B, Hq, Hkv, S, D, dtype):
+        q = jnp.asarray(RNG.standard_normal((B, Hq, D)), dtype)
+        k = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), dtype)
+        v = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), dtype)
+        lens = jnp.asarray(RNG.integers(1, S + 1, B), jnp.int32)
+        got = decode_attention_pallas(q, k, v, lens, block_kv=128)
+        want = decode_attention_ref(q, k, v, lens)
+        tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+        assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                        atol=tol, rtol=tol)
+
+    def test_windowed_decode(self):
+        B, Hq, Hkv, S, D = 1, 4, 2, 512, 64
+        q = jnp.asarray(RNG.standard_normal((B, Hq, D)), jnp.float32)
+        k = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), jnp.float32)
+        v = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), jnp.float32)
+        lens = jnp.array([400], jnp.int32)
+        got = decode_attention_pallas(q, k, v, lens, window=128, block_kv=128)
+        want = decode_attention_ref(q, k, v, lens, window=128)
+        assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------- mamba scan
+class TestMambaScan:
+    @pytest.mark.parametrize("B,T,Dm,N,chunk,block_d", [
+        (1, 64, 32, 8, 32, 32),
+        (2, 128, 64, 16, 64, 32),
+        (1, 96, 48, 16, 32, 16),
+    ])
+    def test_matches_ref(self, B, T, Dm, N, chunk, block_d):
+        x = jnp.asarray(RNG.standard_normal((B, T, Dm)), jnp.float32)
+        delta = jnp.asarray(np.abs(RNG.standard_normal((B, T, Dm))) * 0.1, jnp.float32)
+        A = -jnp.asarray(np.abs(RNG.standard_normal((Dm, N))) + 0.1, jnp.float32)
+        Bm = jnp.asarray(RNG.standard_normal((B, T, N)), jnp.float32)
+        Cm = jnp.asarray(RNG.standard_normal((B, T, N)), jnp.float32)
+        Dp = jnp.asarray(RNG.standard_normal(Dm), jnp.float32)
+        got = mamba_scan_pallas(x, delta, A, Bm, Cm, Dp, chunk=chunk, block_d=block_d)
+        want, _ = mamba_scan_ref(x, delta, A, Bm, Cm, Dp)
+        assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4)
+
+    def test_step_continues_scan(self):
+        """Decode step after a prefill scan equals one longer scan."""
+        B, T, Dm, N = 1, 32, 16, 8
+        x = jnp.asarray(RNG.standard_normal((B, T + 1, Dm)), jnp.float32)
+        delta = jnp.asarray(np.abs(RNG.standard_normal((B, T + 1, Dm))) * 0.1, jnp.float32)
+        A = -jnp.asarray(np.abs(RNG.standard_normal((Dm, N))) + 0.1, jnp.float32)
+        Bm = jnp.asarray(RNG.standard_normal((B, T + 1, N)), jnp.float32)
+        Cm = jnp.asarray(RNG.standard_normal((B, T + 1, N)), jnp.float32)
+        Dp = jnp.asarray(RNG.standard_normal(Dm), jnp.float32)
+        y_full, _ = mamba_scan_ref(x, delta, A, Bm, Cm, Dp)
+        y_pre, h = mamba_scan_ref(x[:, :T], delta[:, :T], A, Bm[:, :T], Cm[:, :T], Dp)
+        y_step, _ = mamba_step_ref(x[:, T], delta[:, T], A, Bm[:, T], Cm[:, T], Dp, h)
+        assert_allclose(np.asarray(y_step), np.asarray(y_full[:, T]), atol=1e-5, rtol=1e-5)

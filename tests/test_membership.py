@@ -1,0 +1,87 @@
+"""Membership CRDT + elastic assignment tests."""
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.membership import GossipCluster, MembershipView
+from repro.cluster.sim import Network
+from repro.runtime.elastic import ElasticController, derive_assignment
+
+
+class TestMembership:
+    def test_bootstrap_converges(self):
+        c = GossipCluster(5)
+        c.settle()
+        assert c.converged()
+        assert c.views()[0] == frozenset(f"node{i}" for i in range(5))
+
+    def test_leave_propagates(self):
+        c = GossipCluster(4)
+        c.settle()
+        c.node_leaves("node2")
+        c.settle()
+        assert c.converged()
+        assert "node2" not in c.views()[0]
+
+    def test_eject_straggler(self):
+        c = GossipCluster(4)
+        c.settle()
+        c.eject("node0", "node3")
+        c.settle()
+        assert "node3" not in c.views()[0]
+
+    def test_rejoin_after_eject_wins(self):
+        """Add-wins: a node re-joining concurrently with its ejection stays."""
+        c = GossipCluster(3)
+        c.settle()
+        # concurrent: node0 ejects node2 (based on observed state) while
+        # node2 re-announces itself
+        eject_delta = c.nodes["node0"].leave("node2")
+        rejoin_delta = c.nodes["node2"].join()
+        for nid in c.nodes:
+            c.nodes[nid].apply(eject_delta)
+            c.nodes[nid].apply(rejoin_delta)
+        assert all("node2" in v for v in c.views())
+
+    @given(st.lists(st.tuples(st.sampled_from(["join", "leave"]),
+                              st.integers(0, 5)), max_size=12),
+           st.integers(0, 2**31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_converges_under_lossy_gossip(self, events, seed):
+        net = Network(seed=seed, drop_prob=0.4, reorder=True)
+        c = GossipCluster(3, net=net)
+        c.settle()
+        extant = {f"node{i}" for i in range(3)}
+        for kind, i in events:
+            nid = f"xnode{i}"
+            if kind == "join" and nid not in extant:
+                c.node_joins(nid)
+                extant.add(nid)
+            elif kind == "leave" and nid in extant:
+                c.node_leaves(nid)
+                extant.discard(nid)
+        c.settle()
+        c.anti_entropy_round()   # repairs dropped deltas
+        c.anti_entropy_round()
+        assert c.converged()
+
+
+class TestElastic:
+    def test_assignment_partitions_batch(self):
+        a = derive_assignment(frozenset({"a", "b", "c"}), 8, epoch=1)
+        slices = sorted(a.batch_slices.values())
+        assert slices[0][0] == 0 and slices[-1][1] == 8
+        covered = sum(hi - lo for lo, hi in slices)
+        assert covered == 8
+
+    def test_scale_down_reassigns(self):
+        ctl = ElasticController(4, global_batch=8)
+        a1 = ctl.current_assignment()
+        assert a1.dp_size == 4
+        a2 = ctl.fail("node1", detected_by="node0")
+        assert a2.dp_size == 3
+        assert "node1" not in a2.hosts
+        assert sum(hi - lo for lo, hi in a2.batch_slices.values()) == 8
+
+    def test_scale_up(self):
+        ctl = ElasticController(2, global_batch=6)
+        a = ctl.scale_up("node9")
+        assert a.dp_size == 3 and "node9" in a.hosts

@@ -1,0 +1,123 @@
+"""ORSWOT semantics + delta-ORSWOT equivalence (paper §2-3 baselines)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.delta_orswot import delta_add, delta_remove, group_deltas, join_delta
+from repro.core.orswot import Orswot
+
+ACTORS = ["a", "b", "c"]
+ELEMS = [b"x", b"y", b"z", b"w"]
+
+# an op is (kind, actor, element)
+op_st = st.tuples(
+    st.sampled_from(["add", "rem"]), st.sampled_from(ACTORS), st.sampled_from(ELEMS)
+)
+ops_st = st.lists(op_st, max_size=30)
+
+
+def apply_ops_local(replicas, ops):
+    """Each op executes at its actor's replica; no replication."""
+    for kind, actor, elem in ops:
+        i = ACTORS.index(actor)
+        s = replicas[i]
+        if kind == "add":
+            replicas[i] = s.add(actor, elem)
+        else:
+            replicas[i] = s.remove(elem, s.context_of(elem))
+    return replicas
+
+
+class TestSemantics:
+    def test_add_then_remove(self):
+        s = Orswot.new().add("a", b"x")
+        assert b"x" in s.value()
+        s = s.remove(b"x", s.context_of(b"x"))
+        assert b"x" not in s.value()
+
+    def test_add_wins_over_concurrent_remove(self):
+        base = Orswot.new().add("a", b"x")
+        # replica b removes (observed), replica c concurrently re-adds
+        b_side = base.remove(b"x", base.context_of(b"x"))
+        c_side = base.add("c", b"x")
+        merged = b_side.merge(c_side)
+        assert b"x" in merged.value()  # add-wins
+
+    def test_unobserved_remove_is_noop(self):
+        a = Orswot.new().add("a", b"x")
+        b = Orswot.new()  # hasn't seen the add
+        b = b.remove(b"x", b.context_of(b"x"))
+        assert b"x" in a.merge(b).value()
+
+    def test_readd_after_remove(self):
+        s = Orswot.new().add("a", b"x")
+        s = s.remove(b"x", s.context_of(b"x"))
+        s = s.add("a", b"x")
+        assert b"x" in s.value()
+
+
+class TestMergeLattice:
+    @given(ops_st, ops_st)
+    @settings(max_examples=80)
+    def test_merge_commutative(self, ops1, ops2):
+        r = apply_ops_local([Orswot.new()] * 3, ops1 + ops2)
+        a, b = r[0], r[1]
+        assert a.merge(b) == b.merge(a)
+
+    @given(ops_st)
+    @settings(max_examples=80)
+    def test_merge_idempotent(self, ops):
+        r = apply_ops_local([Orswot.new()] * 3, ops)
+        for s in r:
+            assert s.merge(s) == s
+
+    @given(ops_st)
+    @settings(max_examples=60)
+    def test_merge_associative(self, ops):
+        a, b, c = apply_ops_local([Orswot.new()] * 3, ops)
+        assert a.merge(b).merge(c) == a.merge(b.merge(c))
+
+    @given(ops_st, st.randoms(use_true_random=False))
+    @settings(max_examples=60)
+    def test_convergence_any_merge_order(self, ops, rng):
+        replicas = apply_ops_local([Orswot.new()] * 3, ops)
+        order = list(range(3))
+        rng.shuffle(order)
+        x = replicas[order[0]].merge(replicas[order[1]]).merge(replicas[order[2]])
+        y = replicas[2].merge(replicas[0]).merge(replicas[1])
+        assert x == y
+
+
+class TestDeltaEquivalence:
+    """§3: delta replication must be semantically identical to full-state."""
+
+    @given(ops_st)
+    @settings(max_examples=80)
+    def test_delta_stream_equals_full_state(self, ops):
+        full = Orswot.new()
+        via_deltas = Orswot.new()
+        deltas = []
+        for kind, actor, elem in ops:
+            if kind == "add":
+                full2, d = delta_add(full, actor, elem)
+            else:
+                full2, d = delta_remove(full, elem, full.context_of(elem))
+            full = full2
+            deltas.append(d)
+            via_deltas = join_delta(via_deltas, d)
+        assert via_deltas.value() == full.value()
+        assert via_deltas == full
+
+    @given(ops_st)
+    @settings(max_examples=50)
+    def test_delta_groups_and_duplication(self, ops):
+        full = Orswot.new()
+        deltas = []
+        for kind, actor, elem in ops:
+            if kind == "add":
+                full, d = delta_add(full, actor, elem)
+            else:
+                full, d = delta_remove(full, elem, full.context_of(elem))
+            deltas.append(d)
+        group = group_deltas(deltas)
+        # applying the group twice (duplication) converges to the same value
+        s = join_delta(join_delta(Orswot.new(), group), group)
+        assert s.value() == full.value()

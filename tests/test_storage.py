@@ -1,0 +1,91 @@
+"""LSM store + order-preserving key codec tests."""
+from hypothesis import given, settings, strategies as st
+
+from repro.storage.keycodec import decode_key, encode_key
+from repro.storage.lsm import LsmStore
+
+key_part = st.one_of(
+    st.binary(max_size=12), st.integers(0, 2**64 - 1), st.text(max_size=8)
+)
+key_tuple = st.lists(key_part, min_size=1, max_size=4).map(tuple)
+
+
+def norm(t):
+    return tuple(p.encode() if isinstance(p, str) else p for p in t)
+
+
+class TestKeyCodec:
+    @given(key_tuple)
+    def test_roundtrip(self, t):
+        assert decode_key(encode_key(t)) == norm(t)
+
+    @given(st.lists(st.binary(max_size=10), min_size=2, max_size=6))
+    def test_order_preserved_bytes(self, parts):
+        keys = [(p,) for p in parts]
+        encoded = [encode_key(k) for k in keys]
+        assert sorted(range(len(keys)), key=lambda i: keys[i][0]) == sorted(
+            range(len(keys)), key=lambda i: encoded[i]
+        )
+
+    @given(st.lists(st.tuples(st.binary(max_size=6), st.integers(0, 1 << 32)),
+                    min_size=2, max_size=8))
+    def test_order_preserved_composite(self, parts):
+        encoded = [encode_key(p) for p in parts]
+        assert sorted(range(len(parts)), key=lambda i: parts[i]) == sorted(
+            range(len(parts)), key=lambda i: encoded[i]
+        )
+
+    def test_embedded_nulls(self):
+        a = encode_key((b"a\x00b",))
+        b = encode_key((b"a", b"b"))
+        assert a != b and decode_key(a) == (b"a\x00b",)
+
+
+class TestLsm:
+    def test_put_get_delete(self):
+        s = LsmStore(memtable_limit=4)
+        for i in range(10):
+            s.put(b"k%02d" % i, b"v%d" % i)
+        assert s.get(b"k03") == b"v3"
+        s.delete(b"k03")
+        assert s.get(b"k03") is None
+        assert len(s) == 9
+
+    def test_scan_merges_levels(self):
+        s = LsmStore(memtable_limit=3)
+        for i in range(10):
+            s.put(b"k%02d" % i, b"v%d" % i)
+        s.put(b"k05", b"NEW")  # overwrite in memtable
+        got = dict(s.scan(b"k03", b"k07"))
+        assert got == {b"k03": b"v3", b"k04": b"v4", b"k05": b"NEW", b"k06": b"v6"}
+
+    @given(st.lists(st.tuples(st.binary(min_size=1, max_size=6),
+                              st.binary(max_size=6)), max_size=40))
+    @settings(max_examples=60)
+    def test_matches_dict_model(self, ops):
+        s = LsmStore(memtable_limit=5, auto_compact_runs=3)
+        model = {}
+        for k, v in ops:
+            s.put(k, v)
+            model[k] = v
+        for k, v in model.items():
+            assert s.get(k) == v
+        assert dict(s.scan(b"", b"\xff" * 8)) == model
+
+    def test_compaction_filter_and_discard(self):
+        s = LsmStore(memtable_limit=100)
+        for i in range(10):
+            s.put(b"k%d" % i, b"v")
+        dropped = []
+        s.compaction_filter = lambda k, v: k < b"k5"
+        s.on_discard = lambda k, v: dropped.append(k)
+        discarded = s.compact()
+        assert len(discarded) == 5 and len(dropped) == 5
+        assert s.get(b"k2") is None and s.get(b"k7") == b"v"
+
+    def test_io_accounting_monotone(self):
+        s = LsmStore()
+        snap = s.stats.snapshot()
+        s.put(b"abc", b"defgh")
+        d = s.stats.delta(snap)
+        assert d.bytes_written == 8 and d.num_writes == 1

@@ -1,0 +1,80 @@
+"""§4.4 streaming ORSWOT join: subset merges ≡ full merges, queries work."""
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.clusters import BigsetCluster
+from repro.core.streaming import merge_entry, quorum_is_member, quorum_read, streaming_join
+from repro.core.bigset import BigsetVnode
+
+S = b"s"
+ELEMS = [b"aa", b"bb", b"cc", b"dd", b"ee", b"ff"]
+
+op_st = st.tuples(
+    st.sampled_from(["add", "rem"]), st.integers(0, 2), st.sampled_from(ELEMS)
+)
+ops_st = st.lists(op_st, max_size=22)
+
+
+def build_cluster(ops, sync=False):
+    big = BigsetCluster(3, sync=sync)
+    for kind, coord, elem in ops:
+        if kind == "add":
+            _, ctx = big.vnodes[big.actors[coord]].is_member(S, elem)
+            big.add(S, elem, coord, ctx)
+        else:
+            big.remove(S, elem, coord)
+    return big
+
+
+class TestStreamingJoin:
+    @given(ops_st)
+    @settings(max_examples=50, deadline=None)
+    def test_streaming_equals_full_merge(self, ops):
+        big = build_cluster(ops, sync=False)
+        # DON'T settle: replicas genuinely divergent
+        streams = []
+        fulls = []
+        for a in big.actors:
+            vn = big.vnodes[a]
+            rs = vn.read(S)
+            streams.append((rs.clock, rs.entries()))
+            fulls.append(vn.read_full(S))
+        via_stream = quorum_read(streams)
+        via_full = fulls[0].merge(fulls[1]).merge(fulls[2])
+        assert via_stream == via_full
+
+    @given(ops_st)
+    @settings(max_examples=40, deadline=None)
+    def test_stream_yields_sorted_elements(self, ops):
+        big = build_cluster(ops)
+        streams = [
+            (big.vnodes[a].read(S).clock, big.vnodes[a].read(S).entries())
+            for a in big.actors
+        ]
+        elems = [e for e, _ in streaming_join(streams)]
+        assert elems == sorted(elems)
+
+    @given(ops_st, st.sampled_from(ELEMS))
+    @settings(max_examples=50, deadline=None)
+    def test_quorum_is_member_matches_quorum_read(self, ops, probe_elem):
+        big = build_cluster(ops, sync=False)
+        probes = []
+        for a in big.actors:
+            vn = big.vnodes[a]
+            present, dots = vn.is_member(S, probe_elem)
+            probes.append(
+                (vn.read_clock(S), frozenset(dots) if present else None)
+            )
+        member, _ = quorum_is_member(probes)
+        full = big.read(S, r=3)
+        assert member == (probe_elem in full.value())
+
+    def test_pagination_over_quorum(self):
+        big = build_cluster([("add", i % 3, e) for i, e in enumerate(ELEMS)], sync=True)
+        page = big.vnodes[big.actors[0]].range_query(S, b"bb", 3)
+        assert page == [b"bb", b"cc", b"dd"]
+
+    def test_merge_entry_no_dots_is_absent(self):
+        from repro.core.clock import Clock
+
+        c = Clock.zero()
+        assert merge_entry([None, None], [c, c]) == frozenset()

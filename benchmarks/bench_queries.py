@@ -1,0 +1,112 @@
+"""Paper §4.4: query latency vs cardinality for all three contenders.
+
+The paper's read trade-off ("decomposition hurts full reads") is "mitigated
+by enabling queries on sets": membership is a seek, ranges stream only their
+result, and cross-set joins zipper two ordered key ranges.  A blob store
+must deserialize the *entire* set to answer any of these.  This benchmark
+makes that claim a number: membership / range / intersect-join latency at
+growing cardinality for riak (full-state blob), delta (blob disk path), and
+bigset (decomposed + query engine).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.cluster.clusters import BigsetCluster, DeltaCluster, RiakSetCluster
+from repro.query import Join, Membership, Range
+
+LEFT = b"qleft"
+RIGHT = b"qright"
+RANGE_LIMIT = 25
+
+
+def build(cluster, card: int):
+    """Two overlapping sets: RIGHT holds every other element of LEFT + tail."""
+    for i in range(card):
+        cluster.add(LEFT, i.to_bytes(4, "big"), coordinator=i % cluster.n)
+        if i % 2 == 0:
+            cluster.add(RIGHT, i.to_bytes(4, "big"), coordinator=i % cluster.n)
+    for i in range(card, card + card // 4):
+        cluster.add(RIGHT, i.to_bytes(4, "big"), coordinator=i % cluster.n)
+    return cluster
+
+
+def _time(fn, n_ops: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n_ops):
+        fn()
+    return (time.perf_counter() - t0) / n_ops * 1e6  # us/op
+
+
+def run_blob(cluster, card: int, n_ops: int, rng) -> dict:
+    """Blob contenders answer every query by materialising the whole set."""
+    def member():
+        e = int(rng.integers(card)).to_bytes(4, "big")
+        return e in cluster.read(LEFT).value()
+
+    def range_q():
+        lo = int(rng.integers(card)).to_bytes(4, "big")
+        vals = sorted(v for v in cluster.read(LEFT).value() if v >= lo)
+        return vals[:RANGE_LIMIT]
+
+    def join_q():
+        return cluster.read(LEFT).value() & cluster.read(RIGHT).value()
+
+    return {
+        "member_us": _time(member, n_ops),
+        "range_us": _time(range_q, n_ops),
+        "join_us": _time(join_q, max(1, n_ops // 4)),
+    }
+
+
+def run_bigset(cluster: BigsetCluster, card: int, n_ops: int, rng,
+               r: int = 1) -> dict:
+    def member():
+        e = int(rng.integers(card)).to_bytes(4, "big")
+        return cluster.query(Membership(LEFT, e), r=r).present
+
+    def range_q():
+        lo = int(rng.integers(card)).to_bytes(4, "big")
+        return cluster.query(Range(LEFT, start=lo, limit=RANGE_LIMIT), r=r)
+
+    def join_q():
+        return cluster.query(Join("intersect", LEFT, RIGHT), r=r)
+
+    return {
+        "member_us": _time(member, n_ops),
+        "range_us": _time(range_q, n_ops),
+        "join_us": _time(join_q, max(1, n_ops // 4)),
+    }
+
+
+def main(cards=(100, 1000, 4000), n_ops=60, quick=False) -> List[str]:
+    if quick:
+        cards, n_ops = (50, 200), 20
+    rows = []
+    for card in cards:
+        rng = np.random.default_rng(7)
+        contenders = [
+            ("riak", run_blob, build(RiakSetCluster(3), card)),
+            ("delta", run_blob, build(DeltaCluster(3), card)),
+            ("bigset", None, None),  # built below with compaction
+        ]
+        big = build(BigsetCluster(3), card)
+        big.compact_all()
+        for name, runner, cluster in contenders:
+            if name == "bigset":
+                q = run_bigset(big, card, n_ops, rng)
+            else:
+                q = runner(cluster, card, n_ops, rng)
+            for shape in ("member", "range", "join"):
+                rows.append(
+                    f"queries/{name}/{shape}/{card},{q[shape + '_us']:.1f},"
+                    f"card={card}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

@@ -14,6 +14,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.cluster.clusters import BigsetCluster, RiakSetCluster
+from repro.query import Count, Membership, QueryExecutor, Range
 
 
 def build(cluster, n_keys: int, card: int):
@@ -61,6 +62,35 @@ def run_queries(cluster: BigsetCluster, n_keys: int, n_ops: int) -> Dict[str, fl
     return {"member_tp": member_tp, "range_tp": range_tp}
 
 
+def run_query_io(cluster: BigsetCluster, card: int) -> Dict[str, int]:
+    """Bytes read per query shape — the O(result) vs O(n) comparison.
+
+    Uses the bounded-scan metering (per-query IoStats) that the query
+    executor threads through every plan: a full fold pays for every
+    element-key, a range/membership query pays for its result plus the
+    causal metadata (set-clock + tombstone).
+    """
+    vn = cluster.vnodes[cluster.actors[0]]
+    ex = QueryExecutor(vn)
+    S = b"set000"
+    lo = (card // 2).to_bytes(4, "big")
+    hi = (card // 2 + 10).to_bytes(4, "big")
+
+    meter = vn.store.meter()
+    _ = list(vn.fold(S))  # full-set fold: O(n) bytes
+    fold_bytes = meter.delta().bytes_read
+
+    member = ex.execute(Membership(S, lo))
+    range10 = ex.execute(Range(S, start=lo, end=hi))
+    count = ex.execute(Count(S, start=lo, end=hi))
+    return {
+        "fold": fold_bytes,
+        "member": member.stats.bytes_read,
+        "range10": range10.stats.bytes_read,
+        "count10": count.stats.bytes_read,
+    }
+
+
 def main(cards=(100, 500, 1500), n_keys=10, n_reads=120, quick=False) -> List[str]:
     if quick:
         cards, n_keys, n_reads = (50, 200), 6, 40
@@ -80,6 +110,11 @@ def main(cards=(100, 500, 1500), n_keys=10, n_reads=120, quick=False) -> List[st
         q = run_queries(big, n_keys, n_reads)
         rows.append(f"queries/bigset/{card},{1e6 / q['member_tp']:.1f},"
                     f"member_tp={q['member_tp']:.0f};range_tp={q['range_tp']:.0f}")
+        io = run_query_io(big, card)
+        rows.append(
+            f"reads/io/bigset/{card},0,"
+            f"fold_bytes={io['fold']};member_bytes={io['member']};"
+            f"range10_bytes={io['range10']};count10_bytes={io['count10']}")
     return rows
 
 

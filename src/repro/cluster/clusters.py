@@ -24,7 +24,11 @@ from ..core.clock import Clock
 from ..core.delta_orswot import delta_add, delta_remove, join_delta
 from ..core.dots import Dot
 from ..core.orswot import Orswot
-from ..core.streaming import quorum_read
+from ..core.streaming import merge_entry, quorum_is_member, quorum_read
+from ..query import cursor as query_cursor
+from ..query import plan as query_plan
+from ..query.executor import (QueryExecutor, QueryResult, QueryStats,
+                              collect_page, stream_entries, zipper_join)
 from ..storage.lsm import LsmStore
 from .sim import Message, Network
 
@@ -221,6 +225,161 @@ class BigsetCluster(_ClusterBase):
     def value(self, set_name: bytes, r: int = 1):
         return self.read(set_name, r).value()
 
+    # -------------------------------------------------------------- queries
+    def query(self, plan, r: Optional[int] = None, repair: bool = True
+              ) -> QueryResult:
+        """Coverage-query path: scatter a plan to ``r`` replicas, stream the
+        partial results through a quorum merge, and read-repair stragglers.
+
+        Each replica contributes a lazy visible-entry stream (a storage seek
+        + bounded scan, §4.4); the merge is the streaming ORSWOT join of
+        :mod:`repro.core.streaming` with per-replica dot attribution so any
+        replica missing a surviving dot gets the element-key delta replayed
+        to it (read repair) — anti-entropy rides on the query workload.
+        ``r`` defaults to a majority quorum.
+        """
+        query_plan.validate(plan)
+        if r is None:
+            r = self.n // 2 + 1
+        actors = self.actors[:r]
+        meters = [self.vnodes[a].store.meter() for a in actors]
+        if isinstance(plan, query_plan.Membership):
+            res = self._q_membership(plan, actors, repair)
+        elif isinstance(plan, query_plan.Range):
+            res = self._q_range(
+                plan.set_name, plan.start, plan.end, plan.limit,
+                plan.cursor, query_plan.cursor_scope(plan), actors, repair)
+        elif isinstance(plan, query_plan.Scan):
+            res = self._q_range(
+                plan.set_name, None, None, plan.page_size,
+                plan.cursor, query_plan.cursor_scope(plan), actors, repair)
+        elif isinstance(plan, query_plan.Count):
+            res = self._q_count(plan, actors, repair)
+        elif isinstance(plan, query_plan.Join):
+            res = self._q_join(plan, actors, repair)
+        else:  # pragma: no cover - validate() rejects
+            raise query_plan.PlanError(type(plan).__name__)
+        for m in meters:
+            io = m.delta()
+            res.stats.bytes_read += io.bytes_read
+            res.stats.num_seeks += io.num_seeks
+        res.stats.elements_emitted = len(res.entries)
+        return res
+
+    def _executors(self, actors) -> List[QueryExecutor]:
+        return [QueryExecutor(self.vnodes[a]) for a in actors]
+
+    def _repair(self, set_name: bytes, element: bytes, dots, per_stream,
+                clocks, actors) -> None:
+        """Replay surviving element-keys to quorum replicas missing them.
+
+        The replayed delta carries the stored value, fetched from a replica
+        that holds the key (element-keys are immutable payload under CRDT
+        liveness, so any holder's copy is authoritative).
+        """
+        from ..core.bigset import element_key
+
+        sent = False
+        for dot in dots:
+            targets = [
+                a for i, a in enumerate(actors)
+                if dot not in (per_stream[i] or frozenset())
+                and not clocks[i].seen(dot)
+            ]
+            if not targets:
+                continue  # everyone already has it: the common case is free
+            donors = [
+                a for i, a in enumerate(actors)
+                if per_stream[i] is not None and dot in per_stream[i]
+            ]
+            value = b""
+            for donor in donors:
+                v = self.vnodes[donor].store.get(
+                    element_key(set_name, element, dot))
+                if v is not None:
+                    value = v
+                    break
+            for a in targets:
+                delta = InsertDelta(set_name, element, dot, value=value)
+                self.net.send(
+                    donors[0] if donors else actors[0], a, delta,
+                    delta.size_bytes())
+                sent = True
+        if sent and self.sync:
+            self.net.deliver_all(self._handle)
+
+    def _q_membership(self, plan, actors, repair) -> QueryResult:
+        probes = [ex.execute(plan) for ex in self._executors(actors)]
+        clocks = [p.clock for p in probes]
+        res_stats = QueryStats(
+            keys_scanned=sum(p.stats.keys_scanned for p in probes),
+            batches=sum(p.stats.batches for p in probes))
+        per_stream = [
+            frozenset(p.entries[0][1]) if p.present else None for p in probes
+        ]
+        present, dots = quorum_is_member(list(zip(clocks, per_stream)))
+        res = QueryResult(clock=Clock.zero(), stats=res_stats)
+        for c in clocks:
+            res.clock = res.clock.join(c)
+        res.present = present
+        if present:
+            res.entries = [(plan.element, dots)]
+            if repair:
+                self._repair(plan.set_name, plan.element, dots, per_stream,
+                             clocks, actors)
+        return res
+
+    def _quorum_stream(self, set_name, actors, start, end, after, repair,
+                       stats: Optional[QueryStats] = None) -> "_QuorumStream":
+        streams = [
+            ex.entry_stream(set_name, start=start, end=end, after=after,
+                            stats=stats)
+            for ex in self._executors(actors)
+        ]
+        clocks = [self.vnodes[a].read_clock(set_name) for a in actors]
+        repair_fn = (
+            (lambda el, dots, per: self._repair(
+                set_name, el, dots, per, clocks, actors))
+            if repair else None)
+        return _QuorumStream(streams, clocks, repair_fn)
+
+    def _q_range(self, set_name, start, end, limit, cursor, scope, actors,
+                 repair) -> QueryResult:
+        resume_start, after = query_cursor.resume_point(cursor, scope)
+        if resume_start is not None:
+            start = resume_start
+        res = QueryResult()
+        merged = self._quorum_stream(set_name, actors, start, end, after,
+                                     repair, stats=res.stats)
+        res.clock = merged.clock
+        collect_page(stream_entries(merged), limit, scope, res)
+        return res
+
+    def _q_count(self, plan, actors, repair) -> QueryResult:
+        res = QueryResult()
+        merged = self._quorum_stream(
+            plan.set_name, actors, plan.start, plan.end, None, repair,
+            stats=res.stats)
+        res.clock = merged.clock
+        n = 0
+        while merged.advance() is not None:
+            n += 1
+        res.count = n
+        return res
+
+    def _q_join(self, plan, actors, repair) -> QueryResult:
+        scope = query_plan.cursor_scope(plan)
+        start, after = query_cursor.resume_point(plan.cursor, scope)
+        res = QueryResult()
+        left = self._quorum_stream(plan.left, actors, start, None, after,
+                                   repair, stats=res.stats)
+        right = self._quorum_stream(plan.right, actors, start, None, after,
+                                    repair, stats=res.stats)
+        res.clock = left.clock.join(right.clock)
+        collect_page(
+            zipper_join(plan.kind, left, right), plan.limit, scope, res)
+        return res
+
     def compact_all(self) -> None:
         for vn in self.vnodes.values():
             vn.compact()
@@ -232,3 +391,57 @@ class BigsetCluster(_ClusterBase):
             for k in vars(agg):
                 setattr(agg, k, getattr(agg, k) + getattr(vn.store.stats, k))
         return agg
+
+
+class _QuorumStream:
+    """Streaming quorum merge of per-replica visible entry streams.
+
+    Presents the same head/advance/seek_to surface as the executor's
+    per-vnode entry stream, so joins compose over quorum-merged sides.
+    Memory is bounded: one head entry per replica.  Surviving dots follow
+    the optimized-OR-set rule of :func:`repro.core.streaming.merge_entry`;
+    per-element per-replica attribution is handed to ``repair_fn`` so the
+    cluster can replay missing element-keys (read repair).
+    """
+
+    def __init__(self, streams, clocks, repair_fn=None):
+        self._streams = streams
+        self.clocks = clocks
+        self._repair = repair_fn
+        self.clock = Clock.zero()
+        for c in clocks:
+            self.clock = self.clock.join(c)
+        self.head: Optional[Tuple[bytes, Tuple[Dot, ...]]] = None
+        self._pump()
+
+    def advance(self) -> Optional[Tuple[bytes, Tuple[Dot, ...]]]:
+        h = self.head
+        self._pump()
+        return h
+
+    def seek_to(self, element: bytes) -> None:
+        if self.head is not None and self.head[0] >= element:
+            return
+        for s in self._streams:
+            s.seek_to(element)
+        self._pump()
+
+    def _pump(self) -> None:
+        """Advance to the next element that survives the quorum merge."""
+        while True:
+            heads = [s.head for s in self._streams]
+            live = [h[0] for h in heads if h is not None]
+            if not live:
+                self.head = None
+                return
+            el = min(live)
+            per_stream: List[Optional[frozenset]] = [None] * len(heads)
+            for i, s in enumerate(self._streams):
+                if s.head is not None and s.head[0] == el:
+                    per_stream[i] = frozenset(s.advance()[1])
+            dots = merge_entry(per_stream, self.clocks)
+            if dots and self._repair is not None:
+                self._repair(el, dots, per_stream)
+            if dots:
+                self.head = (el, tuple(sorted(dots)))
+                return

@@ -72,6 +72,32 @@ def decode_element_key(key: bytes) -> Tuple[bytes, bytes, Dot]:
     return set_name, element, Dot(actor.decode() if isinstance(actor, bytes) else actor, counter)
 
 
+def element_bounds(
+    set_name: bytes,
+    start: Optional[bytes] = None,
+    end: Optional[bytes] = None,
+    after: Optional[bytes] = None,
+) -> Tuple[bytes, bytes]:
+    """Encoded key bounds for the element range ``[start, end)`` of a set.
+
+    ``after`` seeks *strictly past* every key of that element (cursor
+    resumption): in the order-preserving codec ``element + b"\\x00"`` is the
+    immediate successor element, so its encoded prefix upper-bounds all of
+    ``after``'s keys.  ``after`` wins over ``start`` when both are given.
+    """
+    if after is not None:
+        lo = encode_key((set_name, KIND_ELEMENT, after + b"\x00"))
+    elif start is not None:
+        lo = encode_key((set_name, KIND_ELEMENT, start))
+    else:
+        lo = encode_key((set_name, KIND_ELEMENT))
+    if end is not None:
+        hi = encode_key((set_name, KIND_ELEMENT, end))
+    else:
+        hi = encode_key((set_name, KIND_ELEMENT + 1))
+    return lo, hi
+
+
 # ------------------------------------------------------------------ deltas
 @dataclass(frozen=True)
 class InsertDelta:
@@ -231,11 +257,30 @@ class BigsetVnode:
     ) -> Iterator[Tuple[bytes, Dot, bytes]]:
         """Fold including element values (checkpoint-shard payloads)."""
         ts = self.read_tombstone(set_name)
-        lo, hi = element_range(set_name)
-        for k, v in self.store.scan(lo, hi):
-            _s, element, dot = decode_element_key(k)
+        for element, dot, v in self.fold_raw(set_name):
             if not ts.seen(dot):
                 yield element, dot, v
+
+    def fold_raw(
+        self,
+        set_name: bytes,
+        start: Optional[bytes] = None,
+        end: Optional[bytes] = None,
+        after: Optional[bytes] = None,
+    ) -> Iterator[Tuple[bytes, Dot, bytes]]:
+        """Unfiltered element-key stream over a bounded range.
+
+        This is the fold hook the query executor drives: a storage *seek* to
+        the range start (or strictly past the cursor element via ``after``)
+        followed by a bounded lazy scan, so a range query touches
+        O(result + causal metadata) bytes instead of the whole set.
+        Tombstone visibility is **not** applied here — the executor filters
+        dots in batches (see :mod:`repro.query.batch`).
+        """
+        lo, hi = element_bounds(set_name, start, end, after)
+        for k, v in self.store.seek(lo, hi):
+            _s, element, dot = decode_element_key(k)
+            yield element, dot, v
 
     def read(self, set_name: bytes, batch_size: int = 10_000) -> "ReadStream":
         """Streaming read (§4.4): batches of a partial ORSWOT, default 10k."""
@@ -259,13 +304,12 @@ class BigsetVnode:
         context for a subsequent remove or replacing add.
         """
         ts = self.read_tombstone(set_name)
-        lo = encode_key((set_name, KIND_ELEMENT, element))
-        hi = encode_key((set_name, KIND_ELEMENT, element + b"\x00"))
-        dots = []
-        for k, _v in self.store.scan(lo, hi):
-            _s, el, dot = decode_element_key(k)
-            if el == element and not ts.seen(dot):
-                dots.append(dot)
+        dots = [
+            dot
+            for el, dot, _v in self.fold_raw(
+                set_name, start=element, end=element + b"\x00")
+            if el == element and not ts.seen(dot)
+        ]
         return (len(dots) > 0), tuple(sorted(dots))
 
     def range_query(
@@ -273,12 +317,9 @@ class BigsetVnode:
     ) -> List[bytes]:
         """Seek to ``start`` and stream up to ``limit`` members (pagination)."""
         ts = self.read_tombstone(set_name)
-        lo = encode_key((set_name, KIND_ELEMENT, start))
-        _, hi = element_range(set_name)
         out: List[bytes] = []
         last = None
-        for k, _v in self.store.scan(lo, hi):
-            _s, el, dot = decode_element_key(k)
+        for el, dot, _v in self.fold_raw(set_name, start=start):
             if ts.seen(dot):
                 continue
             if el != last:

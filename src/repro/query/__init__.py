@@ -1,0 +1,29 @@
+"""Bigset query engine (paper §4.4).
+
+The paper's decomposition trade-off — writes become O(causal metadata) but a
+full read must stream every element-key — is "mitigated by enabling queries
+on sets": because element-keys live in one lexicographically ordered range,
+membership is a seek, range scans touch only their result, and cross-set
+joins are ordered-stream zippers.  This package is that query layer:
+
+* :mod:`repro.query.plan`     — logical plans (membership / range / count /
+  paginated scan / cross-set streaming joins);
+* :mod:`repro.query.cursor`   — opaque resumable pagination tokens;
+* :mod:`repro.query.batch`    — vectorised dot-visibility filtering that
+  dispatches the ``kernels/dot_seen`` Pallas kernel over dense
+  ``(actors, counters)`` batches instead of per-dot Python checks;
+* :mod:`repro.query.executor` — the streaming executor: bounded-memory folds
+  over LSM seeks, with per-query :class:`~repro.storage.lsm.IoStats`.
+
+Cluster-level scatter/gather with quorum merge and read-repair lives in
+:meth:`repro.cluster.clusters.BigsetCluster.query`.
+"""
+from .cursor import CursorError, decode_cursor, encode_cursor
+from .executor import QueryExecutor, QueryResult, QueryStats
+from .plan import Count, Join, Membership, Plan, PlanError, Range, Scan, validate
+
+__all__ = [
+    "Count", "CursorError", "Join", "Membership", "Plan", "PlanError",
+    "QueryExecutor", "QueryResult", "QueryStats", "Range", "Scan",
+    "decode_cursor", "encode_cursor", "validate",
+]

@@ -1,0 +1,136 @@
+"""Logical query plans over bigsets (paper §4.4).
+
+A plan is a small frozen dataclass naming *what* to compute; the streaming
+executor (:mod:`repro.query.executor`) decides *how* — which LSM seeks to
+issue, how to batch visibility filtering, when to stop.  Plans are
+deliberately storage-agnostic so the cluster layer can scatter the same plan
+to every replica and quorum-merge the partial results.
+
+Supported shapes:
+
+* :class:`Membership` — is ``element`` in the set (plus its causal context)?
+  A single seek (§4.4: "querying for a lone element ... only requires a
+  seek, not a full set fold").
+* :class:`Range` — ordered members in ``[start, end)``, optionally limited
+  and resumable via a cursor.
+* :class:`Count` — cardinality of a range without materialising it.
+* :class:`Scan` — full-set pagination: a Range with a page size, built for
+  cursoring through million-element sets.
+* :class:`Join` — cross-set streaming intersect/union/difference, a zipper
+  over two lexicographic element streams (§4.4's streaming ORSWOT join
+  generalised to two sets).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Union
+
+import msgpack
+
+JOIN_KINDS = ("intersect", "union", "difference")
+
+
+class PlanError(ValueError):
+    """Raised for malformed or unsupported plans."""
+
+
+@dataclass(frozen=True)
+class Membership:
+    set_name: bytes
+    element: bytes
+
+
+@dataclass(frozen=True)
+class Range:
+    set_name: bytes
+    start: Optional[bytes] = None   # inclusive; None = set start
+    end: Optional[bytes] = None     # exclusive; None = set end
+    limit: Optional[int] = None     # max elements returned
+    cursor: Optional[bytes] = None  # opaque resume token (wins over start)
+
+
+@dataclass(frozen=True)
+class Count:
+    set_name: bytes
+    start: Optional[bytes] = None
+    end: Optional[bytes] = None
+
+
+@dataclass(frozen=True)
+class Scan:
+    set_name: bytes
+    page_size: int = 1000
+    cursor: Optional[bytes] = None
+
+
+@dataclass(frozen=True)
+class Join:
+    """Cross-set streaming join.
+
+    Result entry dots belong to the *left* set's clock domain when the
+    element is present there, otherwise the right set's — they are a causal
+    context for that set only, never a blend of both (each set has its own
+    clock, so equal dots name unrelated inserts across sets).
+    """
+
+    kind: str                       # intersect | union | difference
+    left: bytes                     # left set name
+    right: bytes                    # right set name
+    limit: Optional[int] = None
+    cursor: Optional[bytes] = None
+
+
+Plan = Union[Membership, Range, Count, Scan, Join]
+
+
+def validate(plan: Plan) -> Plan:
+    """Check a plan's invariants; returns the plan for chaining."""
+    if isinstance(plan, Membership):
+        if not plan.set_name or plan.element is None:
+            raise PlanError("membership needs a set name and an element")
+    elif isinstance(plan, Range):
+        if not plan.set_name:
+            raise PlanError("range needs a set name")
+        if plan.limit is not None and plan.limit < 0:
+            raise PlanError("range limit must be >= 0")
+        if (plan.start is not None and plan.end is not None
+                and plan.start >= plan.end):
+            raise PlanError("empty range: start >= end")
+    elif isinstance(plan, Count):
+        if not plan.set_name:
+            raise PlanError("count needs a set name")
+        if (plan.start is not None and plan.end is not None
+                and plan.start >= plan.end):
+            raise PlanError("empty range: start >= end")
+    elif isinstance(plan, Scan):
+        if not plan.set_name:
+            raise PlanError("scan needs a set name")
+        if plan.page_size <= 0:
+            raise PlanError("scan page_size must be > 0")
+    elif isinstance(plan, Join):
+        if plan.kind not in JOIN_KINDS:
+            raise PlanError(f"unknown join kind {plan.kind!r}")
+        if not plan.left or not plan.right:
+            raise PlanError("join needs two set names")
+        if plan.limit is not None and plan.limit < 0:
+            raise PlanError("join limit must be >= 0")
+    else:
+        raise PlanError(f"unknown plan type {type(plan).__name__}")
+    return plan
+
+
+def cursor_scope(plan: Plan) -> bytes:
+    """The scope a cursor is valid for — tokens must not cross query shapes.
+
+    Components are length-delimited (msgpack), not joined with a separator:
+    ``Range(b"a:b")`` and ``Range(b"a", start=b"b:")`` must never share a
+    scope, or one query's cursor would resume the other.
+    """
+    if isinstance(plan, (Range, Count)):
+        return msgpack.packb(
+            ["range", plan.set_name, plan.start or b"", plan.end or b""])
+    if isinstance(plan, Scan):
+        return msgpack.packb(["scan", plan.set_name])
+    if isinstance(plan, Join):
+        return msgpack.packb(["join", plan.kind, plan.left, plan.right])
+    raise PlanError(f"plan {type(plan).__name__} does not paginate")

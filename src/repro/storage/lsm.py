@@ -15,6 +15,7 @@ riak-objects vs O(causal metadata) for bigset).
 from __future__ import annotations
 
 import bisect
+import itertools
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
@@ -39,6 +40,22 @@ class IoStats:
 
     def total_io(self) -> int:
         return self.bytes_written + self.bytes_read
+
+
+class IoMeter:
+    """Live window over a store's :class:`IoStats` (per-query accounting).
+
+    The query executor opens a meter around each plan execution so results
+    can report *bytes touched by this query* — the paper's O(result +
+    causal metadata) claim made measurable (§2.1, §4.4).
+    """
+
+    def __init__(self, stats: IoStats):
+        self._stats = stats
+        self._before = stats.snapshot()
+
+    def delta(self) -> IoStats:
+        return self._stats.delta(self._before)
 
 
 class _Run:
@@ -121,6 +138,26 @@ class LsmStore:
         levels: List[Iterator[Tuple[bytes, bytes]]] = [iter(mem)]
         levels += [run.scan(lo, hi) for run in self.runs]
         yield from self._merge(levels)
+
+    def seek(
+        self, lo: bytes, hi: Optional[bytes] = None,
+        limit: Optional[int] = None,
+    ) -> Iterator[Tuple[bytes, bytes]]:
+        """Bounded scan: position at ``lo`` and stream at most ``limit`` live
+        entries below ``hi``.
+
+        This is the primitive the query executor drives — a range query pays
+        for the entries it returns (the iterator is lazy and metering happens
+        per yielded entry), never for the whole keyspace.
+        """
+        if hi is None:
+            hi = b"\xff" * 24  # past any encoded key (tags are 0x01/0x02)
+        it = self.scan(lo, hi)
+        return itertools.islice(it, limit) if limit is not None else it
+
+    def meter(self) -> IoMeter:
+        """Open a per-query IO accounting window over this store's stats."""
+        return IoMeter(self.stats)
 
     def _merge(
         self, levels: List[Iterator[Tuple[bytes, bytes]]]

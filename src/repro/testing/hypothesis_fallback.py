@@ -1,0 +1,276 @@
+"""Minimal stand-in for ``hypothesis`` when the real package is absent.
+
+The test suite is written against real hypothesis (declared in
+``pyproject.toml``; CI installs it).  Some execution environments cannot
+install packages, so ``conftest.py`` calls :func:`install` to register this
+module under ``sys.modules['hypothesis']`` **only if** the real package is
+missing — it never shadows a genuine install.
+
+Scope is exactly the API surface the suite uses: ``@given`` with positional
+strategies (bound to the rightmost parameters, as hypothesis does),
+``@settings(max_examples=..., deadline=...)``, and the strategy constructors
+``integers, lists, tuples, sampled_from, binary, text, booleans, one_of,
+randoms, just, none`` plus ``.map``/``.filter``.  Examples are drawn from a
+seeded PRNG (deterministic per test), with no shrinking: on failure the
+falsifying example is attached to the exception message instead.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import string
+import sys
+import types
+import zlib
+from typing import Any, Callable, Optional, Sequence
+
+DEFAULT_MAX_EXAMPLES = 25
+_SETTINGS_ATTR = "_hypofb_settings"
+
+
+class Unsatisfied(Exception):
+    """Raised by :func:`assume` to discard the current example."""
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise Unsatisfied()
+    return True
+
+
+class HealthCheck:
+    """Placeholder mirroring ``hypothesis.HealthCheck`` member names."""
+
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.data_too_large, cls.filter_too_much]
+
+
+class settings:
+    """Decorator recording per-test run options (a subset of hypothesis')."""
+
+    def __init__(self, max_examples: Optional[int] = None, deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn: Callable) -> Callable:
+        setattr(fn, _SETTINGS_ATTR, self)
+        return fn
+
+
+# ------------------------------------------------------------------ strategies
+class SearchStrategy:
+    """Base strategy: subclasses draw one value from an RNG."""
+
+    def example(self, rng: random.Random) -> Any:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return _Mapped(self, fn)
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        return _Filtered(self, pred)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, inner: SearchStrategy, fn: Callable):
+        self.inner, self.fn = inner, fn
+
+    def example(self, rng):
+        return self.fn(self.inner.example(rng))
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, inner: SearchStrategy, pred: Callable):
+        self.inner, self.pred = inner, pred
+
+    def example(self, rng):
+        for _ in range(100):
+            v = self.inner.example(rng)
+            if self.pred(v):
+                return v
+        raise Unsatisfied()
+
+
+class _Lambda(SearchStrategy):
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def just(value) -> SearchStrategy:
+    return _Lambda(lambda rng: value)
+
+
+def none() -> SearchStrategy:
+    return just(None)
+
+
+def integers(min_value: int = -(1 << 16), max_value: int = 1 << 16) -> SearchStrategy:
+    return _Lambda(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return _Lambda(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(seq: Sequence) -> SearchStrategy:
+    seq = list(seq)
+    return _Lambda(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return _Lambda(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: Optional[int] = None, unique: bool = False) -> SearchStrategy:
+    hi = (min_size + 10) if max_size is None else max_size
+
+    def draw(rng):
+        n = rng.randint(min_size, hi)
+        out = [elements.example(rng) for _ in range(n)]
+        if unique:
+            seen, uniq = set(), []
+            for v in out:
+                if v not in seen:
+                    seen.add(v)
+                    uniq.append(v)
+            out = uniq
+        return out
+
+    return _Lambda(draw)
+
+
+def binary(min_size: int = 0, max_size: Optional[int] = None) -> SearchStrategy:
+    hi = (min_size + 8) if max_size is None else max_size
+    return _Lambda(
+        lambda rng: bytes(rng.getrandbits(8)
+                          for _ in range(rng.randint(min_size, hi)))
+    )
+
+
+_TEXT_ALPHABET = string.ascii_letters + string.digits + "_- "
+
+
+def text(alphabet: Optional[str] = None, min_size: int = 0,
+         max_size: Optional[int] = None) -> SearchStrategy:
+    chars = alphabet or _TEXT_ALPHABET
+    hi = (min_size + 8) if max_size is None else max_size
+    return _Lambda(
+        lambda rng: "".join(chars[rng.randrange(len(chars))]
+                            for _ in range(rng.randint(min_size, hi)))
+    )
+
+
+def one_of(*strategies: SearchStrategy) -> SearchStrategy:
+    flat = strategies[0] if len(strategies) == 1 and isinstance(
+        strategies[0], (list, tuple)) else strategies
+    return _Lambda(lambda rng: flat[rng.randrange(len(flat))].example(rng))
+
+
+def randoms(use_true_random: bool = False, note_method_calls: bool = False) -> SearchStrategy:
+    return _Lambda(lambda rng: random.Random(rng.getrandbits(64)))
+
+
+# ----------------------------------------------------------------------- given
+def given(*strategies: SearchStrategy, **kw_strategies: SearchStrategy) -> Callable:
+    """Bind positional strategies to the rightmost test parameters.
+
+    Mirrors hypothesis' binding rule so ``@given(s1, s2)`` works on both
+    plain functions and methods (``self`` stays a caller argument).
+    """
+
+    def decorate(fn: Callable) -> Callable:
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        n_pos = len(strategies)
+        remaining = params[: len(params) - n_pos] if n_pos else list(params)
+        remaining = [p for p in remaining if p.name not in kw_strategies]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, _SETTINGS_ATTR, None) or getattr(
+                fn, _SETTINGS_ATTR, None)
+            max_examples = (
+                cfg.max_examples if cfg is not None and cfg.max_examples
+                else DEFAULT_MAX_EXAMPLES
+            )
+            seed0 = zlib.crc32(fn.__qualname__.encode())
+            ran = 0
+            attempt = 0
+            while ran < max_examples and attempt < max_examples * 5:
+                rng = random.Random(seed0 * 1_000_003 + attempt)
+                attempt += 1
+                try:
+                    drawn = [s.example(rng) for s in strategies]
+                    kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                except Unsatisfied:
+                    continue
+                try:
+                    fn(*args, *drawn, **kw, **kwargs)
+                except Unsatisfied:
+                    continue
+                except Exception as e:
+                    detail = ", ".join(repr(d) for d in drawn)
+                    e.args = (
+                        (f"{e.args[0] if e.args else e!r} "
+                         f"[hypothesis-fallback falsifying example #{attempt - 1}: "
+                         f"({detail})]"),
+                    ) + e.args[1:]
+                    raise
+                ran += 1
+            if ran == 0:
+                # mirror real hypothesis: a strategy rejecting every example
+                # must fail loudly, not pass vacuously
+                raise Unsatisfied(
+                    f"{fn.__qualname__}: every generated example was rejected "
+                    f"({attempt} attempts)")
+
+        # Hide strategy-bound parameters from pytest's fixture resolution.
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+
+    return decorate
+
+
+# --------------------------------------------------------------------- install
+def install() -> None:
+    """Register this shim as ``hypothesis`` if the real package is absent."""
+    if "hypothesis" in sys.modules:
+        return
+    try:
+        import importlib.util
+
+        if importlib.util.find_spec("hypothesis") is not None:
+            return  # real hypothesis available; never shadow it
+    except (ImportError, ValueError):  # pragma: no cover - defensive
+        pass
+
+    this = sys.modules[__name__]
+    pkg = types.ModuleType("hypothesis")
+    pkg.given = given
+    pkg.settings = settings
+    pkg.assume = assume
+    pkg.HealthCheck = HealthCheck
+    pkg.example = lambda *a, **k: (lambda fn: fn)  # @example(...) is a no-op
+    pkg.__version__ = "0.0-fallback"
+    pkg.__fallback__ = this
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in (
+        "integers", "lists", "tuples", "sampled_from", "binary", "text",
+        "booleans", "one_of", "randoms", "just", "none",
+    ):
+        setattr(st_mod, name, getattr(this, name))
+    st_mod.SearchStrategy = SearchStrategy
+
+    pkg.strategies = st_mod
+    sys.modules["hypothesis"] = pkg
+    sys.modules["hypothesis.strategies"] = st_mod

@@ -42,13 +42,16 @@ class SyncReply:
     set_name: bytes
     clock: Clock
     survivors: Clock
-    missing: List[Tuple[bytes, Dot]]
+    # (element, dot, value): the value rides along so the receiver's
+    # replica_insert can re-derive index postings (posting liveness == dot
+    # liveness requires the posting's extractor input, not just the key)
+    missing: List[Tuple[bytes, Dot, bytes]]
 
     def size_bytes(self) -> int:
         return (
             self.clock.size_bytes()
             + self.survivors.size_bytes()
-            + sum(len(e) + 16 for e, _ in self.missing)
+            + sum(len(e) + 16 + len(v) for e, _, v in self.missing)
         )
 
 
@@ -61,12 +64,12 @@ def build_reply(
     vnode: BigsetVnode, set_name: bytes, remote_clock: Clock
 ) -> SyncReply:
     survivors = Clock.zero()
-    missing: List[Tuple[bytes, Dot]] = []
+    missing: List[Tuple[bytes, Dot, bytes]] = []
     dots = []
-    for element, dot in vnode.fold(set_name):
+    for element, dot, value in vnode.fold_values(set_name):
         dots.append(dot)
         if not remote_clock.seen(dot):
-            missing.append((element, dot))
+            missing.append((element, dot, value))
     survivors = survivors.add_dots(dots)
     return SyncReply(set_name, vnode.read_clock(set_name), survivors, missing)
 
@@ -75,8 +78,9 @@ def apply_reply(vnode: BigsetVnode, reply: SyncReply) -> int:
     """Apply a sync reply at the requesting replica.  Returns #keys written."""
     set_name = reply.set_name
     written = 0
-    for element, dot in reply.missing:
-        if vnode.replica_insert(InsertDelta(set_name, element, dot)):
+    for element, dot, value in reply.missing:
+        if vnode.replica_insert(InsertDelta(set_name, element, dot,
+                                            value=value)):
             written += 1
     # removal inference: local surviving keys removed remotely
     removed: List[Dot] = []

@@ -25,10 +25,13 @@ from ..core.delta_orswot import delta_add, delta_remove, join_delta
 from ..core.dots import Dot
 from ..core.orswot import Orswot
 from ..core.streaming import merge_entry, quorum_is_member, quorum_read
+from ..index.spec import IndexSpec
 from ..query import cursor as query_cursor
 from ..query import plan as query_plan
 from ..query.executor import (QueryExecutor, QueryResult, QueryStats,
-                              collect_page, stream_entries, zipper_join)
+                              account_emitted, collect_index_page,
+                              collect_page, index_resume_point,
+                              stream_entries, zipper_join)
 from ..storage.lsm import LsmStore
 from .sim import Message, Network
 
@@ -187,10 +190,19 @@ class BigsetCluster(_ClusterBase):
         }
 
     def add(self, set_name: bytes, element: bytes, coordinator: int = 0,
-            ctx: Iterable[Dot] = ()) -> None:
+            ctx: Iterable[Dot] = (), value: bytes = b"") -> None:
         actor = self.actors[coordinator]
-        delta = self.vnodes[actor].coordinate_insert(set_name, element, ctx)
+        delta = self.vnodes[actor].coordinate_insert(
+            set_name, element, ctx, value=value)
         self._replicate(actor, delta, delta.size_bytes())
+
+    def register_index(self, set_name: bytes, spec: IndexSpec,
+                       backfill: bool = True) -> int:
+        """Register a secondary index on every replica (extractors must run
+        identically downstream).  Returns total backfill postings written."""
+        return sum(
+            vn.register_index(set_name, spec, backfill=backfill)
+            for vn in self.vnodes.values())
 
     def remove(self, set_name: bytes, element: bytes, coordinator: int = 0,
                ctx: Optional[Iterable[Dot]] = None) -> None:
@@ -257,13 +269,15 @@ class BigsetCluster(_ClusterBase):
             res = self._q_count(plan, actors, repair)
         elif isinstance(plan, query_plan.Join):
             res = self._q_join(plan, actors, repair)
+        elif isinstance(plan, (query_plan.IndexLookup, query_plan.IndexRange)):
+            res = self._q_index(plan, actors, repair)
         else:  # pragma: no cover - validate() rejects
             raise query_plan.PlanError(type(plan).__name__)
         for m in meters:
             io = m.delta()
             res.stats.bytes_read += io.bytes_read
             res.stats.num_seeks += io.num_seeks
-        res.stats.elements_emitted = len(res.entries)
+        account_emitted(res)
         return res
 
     def _executors(self, actors) -> List[QueryExecutor]:
@@ -313,7 +327,8 @@ class BigsetCluster(_ClusterBase):
         clocks = [p.clock for p in probes]
         res_stats = QueryStats(
             keys_scanned=sum(p.stats.keys_scanned for p in probes),
-            batches=sum(p.stats.batches for p in probes))
+            batches=sum(p.stats.batches for p in probes),
+            keys_probed=sum(p.stats.keys_probed for p in probes))
         per_stream = [
             frozenset(p.entries[0][1]) if p.present else None for p in probes
         ]
@@ -367,6 +382,43 @@ class BigsetCluster(_ClusterBase):
         res.count = n
         return res
 
+    def _q_index(self, plan, actors, repair) -> QueryResult:
+        """Quorum-merged index query.
+
+        Each replica contributes its visible posting-group stream; the merge
+        is the same streaming ORSWOT rule as element ranges, keyed by
+        ``(index_key, element)``.  A replica missing a surviving element
+        gets the element-key delta replayed (read repair) — downstream
+        ``replica_insert`` re-derives the postings from the delta, so index
+        repair is the ordinary write path, not a second protocol.
+        """
+        scope = query_plan.cursor_scope(plan)
+        start, end = query_plan.index_span(plan)
+        at, after = index_resume_point(plan.cursor, scope)
+        res = QueryResult(index_entries=[])
+        if isinstance(plan, query_plan.IndexLookup):
+            # one probe per replica, matching the quorum membership path
+            res.stats.keys_probed += len(actors)
+        streams = [
+            ex.index_stream(plan.set_name, plan.index, start=start, end=end,
+                            at=at, after=after, stats=res.stats)
+            for ex in self._executors(actors)
+        ]
+        clocks = [self.vnodes[a].read_clock(plan.set_name) for a in actors]
+        repair_fn = (
+            (lambda pos, dots, per: self._repair(
+                plan.set_name, pos[1], dots, per, clocks, actors))
+            if repair else None)
+
+        def absent_fn(i, pos):
+            ds = self.vnodes[actors[i]].is_member(plan.set_name, pos[1])[1]
+            return frozenset(ds) if ds else None
+
+        merged = _QuorumStream(streams, clocks, repair_fn, absent_fn)
+        res.clock = merged.clock
+        collect_index_page(merged, plan.limit, scope, res)
+        return res
+
     def _q_join(self, plan, actors, repair) -> QueryResult:
         scope = query_plan.cursor_scope(plan)
         start, after = query_cursor.resume_point(plan.cursor, scope)
@@ -404,10 +456,11 @@ class _QuorumStream:
     cluster can replay missing element-keys (read repair).
     """
 
-    def __init__(self, streams, clocks, repair_fn=None):
+    def __init__(self, streams, clocks, repair_fn=None, absent_fn=None):
         self._streams = streams
         self.clocks = clocks
         self._repair = repair_fn
+        self._absent = absent_fn
         self.clock = Clock.zero()
         for c in clocks:
             self.clock = self.clock.join(c)
@@ -439,6 +492,14 @@ class _QuorumStream:
             for i, s in enumerate(self._streams):
                 if s.head is not None and s.head[0] == el:
                     per_stream[i] = frozenset(s.advance()[1])
+                elif self._absent is not None:
+                    # index streams are ordered by (index_key, element): a
+                    # replica absent from THIS posting group may still hold
+                    # the element under another index key, so its surviving
+                    # dots must join the merge or concurrent dots it has
+                    # seen would be wrongly killed (element streams never
+                    # need this — absence there means no surviving dots)
+                    per_stream[i] = self._absent(i, el)
             dots = merge_entry(per_stream, self.clocks)
             if dots and self._repair is not None:
                 self._repair(el, dots, per_stream)

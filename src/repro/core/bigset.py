@@ -5,11 +5,16 @@ A bigset vnode stores, per set, in one ordered KV store:
 * ``(set, KIND_CLOCK)``      -> serialized set-clock (BaseVV + DotCloud)
 * ``(set, KIND_TOMBSTONE)``  -> serialized set-tombstone
 * ``(set, KIND_ELEMENT, element, actor, counter)`` -> b""   (one per insert)
+* ``(set, KIND_INDEX, index_name, index_key, element, actor, counter)``
+  -> b""  (secondary-index postings; see :mod:`repro.index`)
 
-Writes read **only the clocks** (O(causal metadata)), append element keys,
-and ship the element-key as the replication delta.  Removes are clock-only.
-Compaction (storage hook) discards element-keys covered by the tombstone and
-then *subtracts* those dots so the tombstone shrinks (§4.3.3).  Reads are a
+Writes read **only the clocks** (O(causal metadata)), append element keys —
+plus one posting per registered-index key, derived deterministically from
+(element, value) so replicas rebuild them from the delta — and ship the
+element-key as the replication delta.  Removes are clock-only (no element
+or index writes).  Compaction (storage hook) discards element-keys *and*
+postings covered by the tombstone in the same pass and then subtracts the
+discarded element dots so the tombstone shrinks (§4.3.3).  Reads are a
 streaming fold over the element-key range in lexicographic element order,
 which also enables membership/range queries and the §4.4 streaming join.
 """
@@ -20,15 +25,16 @@ from typing import Dict, FrozenSet, Iterable, Iterator, List, Optional, Tuple
 
 import msgpack
 
-from ..storage.keycodec import decode_key, encode_key
+from ..index.postings import (decode_posting_key, index_bounds, index_range,
+                              posting_key)
+from ..index.spec import IndexSpec
+from ..storage.keycodec import (KIND_CLOCK, KIND_ELEMENT, KIND_INDEX,
+                                KIND_TOMBSTONE, decode_key, encode_key)
+from ..storage.lsm import TOMBSTONE as STORE_TOMBSTONE
 from ..storage.lsm import LsmStore
 from .clock import Clock
-from .dots import ActorId, Dot
+from .dots import ActorId, Dot, dot_from_key
 from .orswot import Orswot
-
-KIND_CLOCK = 0
-KIND_TOMBSTONE = 1
-KIND_ELEMENT = 2
 
 
 # ------------------------------------------------------------------ codecs
@@ -67,9 +73,19 @@ def element_range(set_name: bytes) -> Tuple[bytes, bytes]:
     return lo, hi
 
 def decode_element_key(key: bytes) -> Tuple[bytes, bytes, Dot]:
-    set_name, kind, element, actor, counter = decode_key(key)
-    assert kind == KIND_ELEMENT
-    return set_name, element, Dot(actor.decode() if isinstance(actor, bytes) else actor, counter)
+    parts = decode_key(key)
+    if len(parts) != 5 or parts[1] != KIND_ELEMENT:
+        # a real exception, not an assert: under ``python -O`` an assert
+        # vanishes and a clock/tombstone/posting key would silently decode
+        # into a garbage Dot
+        raise ValueError(f"not an element key: {parts!r}")
+    set_name, _kind, element, _actor, _counter = parts
+    return set_name, element, _dot_from_parts(parts)
+
+
+def _dot_from_parts(parts: Tuple) -> Dot:
+    """The trailing ``(actor, counter)`` of an element or posting key."""
+    return dot_from_key(parts[-2], parts[-1])
 
 
 def element_bounds(
@@ -144,6 +160,79 @@ class BigsetVnode:
         self.store.on_discard = self._on_discard
         self._discarded: Dict[bytes, List[Dot]] = {}
         self._ts_cache: Dict[bytes, Clock] = {}  # valid only within one compaction
+        self._indexes: Dict[bytes, Dict[bytes, IndexSpec]] = {}
+
+    # ------------------------------------------------------------ sec. indexes
+    def register_index(
+        self, set_name: bytes, spec: IndexSpec, backfill: bool = True
+    ) -> int:
+        """Register a secondary index on one set; returns postings written.
+
+        Extractors must be registered identically on every replica (they run
+        downstream too).  ``backfill`` reconciles the index's posting range
+        against every element-key already in storage — including
+        tombstone-covered ones, preserving the invariant that a posting
+        exists exactly for the element-keys that physically exist, so both
+        compact away in the same pass.  Reconciliation makes re-registration
+        "last wins" for real: postings a previous extractor produced that
+        the new one does not are storage-deleted (their dots are live, so
+        no tombstone would ever discard them), and re-registering the same
+        extractor is a no-op.
+        """
+        self._indexes.setdefault(set_name, {})[spec.name] = spec
+        if not backfill:
+            return 0
+        lo, hi = index_range(set_name, spec.name)
+        stale = {k for k, _ in self.store.seek(lo, hi)}
+        fresh: List[Tuple[bytes, bytes]] = []
+        for element, dot, value in self.fold_raw(set_name):
+            for ik in spec.keys(element, value):
+                k = posting_key(set_name, spec.name, ik, element, dot)
+                if k in stale:
+                    stale.discard(k)  # already correct under this extractor
+                else:
+                    fresh.append((k, b""))
+        batch = fresh + [(k, STORE_TOMBSTONE) for k in sorted(stale)]
+        if batch:
+            self.store.put_batch(batch)
+        return len(fresh)
+
+    def indexes(self, set_name: bytes) -> Tuple[IndexSpec, ...]:
+        return tuple(self._indexes.get(set_name, {}).values())
+
+    def _posting_writes(
+        self, set_name: bytes, element: bytes, dot: Dot, value: bytes
+    ) -> List[Tuple[bytes, bytes]]:
+        specs = self._indexes.get(set_name)
+        if not specs:
+            return []
+        return [
+            (posting_key(set_name, spec.name, ik, element, dot), b"")
+            for spec in specs.values()
+            for ik in spec.keys(element, value)
+        ]
+
+    def fold_postings(
+        self,
+        set_name: bytes,
+        index_name: bytes,
+        start: Optional[bytes] = None,
+        end: Optional[bytes] = None,
+        at: Optional[Tuple[bytes, bytes]] = None,
+        after: Optional[Tuple[bytes, bytes]] = None,
+    ) -> Iterator[Tuple[bytes, bytes, Dot]]:
+        """Unfiltered ``(index_key, element, dot)`` posting stream.
+
+        The index analogue of :meth:`fold_raw`: a storage seek to the first
+        relevant posting (or a ``(index_key, element)`` cursor boundary via
+        ``at``/``after``) plus a bounded lazy scan.  Tombstone visibility is
+        applied by the query executor's batched dot filter, exactly as for
+        element-keys.
+        """
+        lo, hi = index_bounds(set_name, index_name, start, end, at, after)
+        for k, _v in self.store.seek(lo, hi):
+            _s, _i, ik, element, dot = decode_posting_key(k)
+            yield ik, element, dot
 
     # ------------------------------------------------------------- clock io
     def read_clock(self, set_name: bytes) -> Clock:
@@ -180,6 +269,7 @@ class BigsetVnode:
                 (tombstone_key(set_name), _clock_to_bytes(ts)),
                 (element_key(set_name, element, dot), value),
             ]
+            + self._posting_writes(set_name, element, dot, value)
         )
         return InsertDelta(set_name, element, dot, ctx, value)
 
@@ -191,8 +281,8 @@ class BigsetVnode:
         Returns True if the element-key was written (False -> duplicate no-op).
         """
         set_name = delta.set_name
-        sc = self.read_clock(set_name)
-        ts = self.read_tombstone(set_name)
+        sc0 = sc = self.read_clock(set_name)
+        ts0 = ts = self.read_tombstone(set_name)
         for dot in delta.ctx:
             if not sc.seen(dot):
                 sc = sc.add(dot)
@@ -206,15 +296,21 @@ class BigsetVnode:
                     (tombstone_key(set_name), _clock_to_bytes(ts)),
                     (element_key(set_name, delta.element, delta.dot), delta.value),
                 ]
+                + self._posting_writes(
+                    set_name, delta.element, delta.dot, delta.value)
             )
             return True
-        # seen: write clocks only if the ctx changed them
-        self.store.put_batch(
-            [
-                (clock_key(set_name), _clock_to_bytes(sc)),
-                (tombstone_key(set_name), _clock_to_bytes(ts)),
-            ]
-        )
+        # seen: write clocks only if the ctx changed them — a redelivered
+        # delta whose ctx is already absorbed must be byte-for-byte free
+        # under at-least-once delivery (Clock.add returns self on no-ops,
+        # so identity is an exact change test)
+        if sc is not sc0 or ts is not ts0:
+            self.store.put_batch(
+                [
+                    (clock_key(set_name), _clock_to_bytes(sc)),
+                    (tombstone_key(set_name), _clock_to_bytes(ts)),
+                ]
+            )
         return False
 
     # -------------------------------------------------------------- removes
@@ -230,13 +326,15 @@ class BigsetVnode:
         self._apply_remove(delta.set_name, delta.ctx)
 
     def _apply_remove(self, set_name: bytes, ctx: Tuple[Dot, ...]) -> None:
-        sc = self.read_clock(set_name)
-        ts = self.read_tombstone(set_name)
+        sc0 = sc = self.read_clock(set_name)
+        ts0 = ts = self.read_tombstone(set_name)
         for dot in ctx:
             if sc.seen(dot):
                 ts = ts.add(dot)  # key exists (or existed): compact it away
             else:
                 sc = sc.add(dot)  # unseen add: pre-empt it ever materialising
+        if sc is sc0 and ts is ts0:
+            return  # redelivered remove already absorbed: zero writes
         self.store.put_batch(
             [
                 (clock_key(set_name), _clock_to_bytes(sc)),
@@ -334,17 +432,23 @@ class BigsetVnode:
 
     # ----------------------------------------------------------- compaction
     def _compaction_filter(self, key: bytes, value: bytes) -> bool:
-        """The modified-leveldb hook: drop element-keys seen by the tombstone."""
+        """The modified-leveldb hook: drop element-keys **and** index
+        postings seen by the tombstone.
+
+        Both kinds carry their dot in the trailing ``(actor, counter)``
+        components and both are tested against the same tombstone snapshot
+        in the same pass, so a dead element-key and its postings always
+        leave storage together — no separate index GC.
+        """
         parts = decode_key(key)
-        if len(parts) < 3 or parts[1] != KIND_ELEMENT:
+        if len(parts) < 3 or parts[1] not in (KIND_ELEMENT, KIND_INDEX):
             return False
         set_name = parts[0]
         ts = self._ts_cache.get(set_name)
         if ts is None:
             ts = _clock_from_bytes(self._peek(tombstone_key(set_name)))
             self._ts_cache[set_name] = ts
-        dot = Dot(parts[3].decode() if isinstance(parts[3], bytes) else parts[3], parts[4])
-        return ts.seen(dot)
+        return ts.seen(_dot_from_parts(parts))
 
     def _peek(self, key: bytes) -> Optional[bytes]:
         # un-metered read used inside compaction (compaction volume is metered
@@ -361,9 +465,9 @@ class BigsetVnode:
 
     def _on_discard(self, key: bytes, value: bytes) -> None:
         parts = decode_key(key)
-        set_name = parts[0]
-        dot = Dot(parts[3].decode() if isinstance(parts[3], bytes) else parts[3], parts[4])
-        self._discarded.setdefault(set_name, []).append(dot)
+        if parts[1] != KIND_ELEMENT:
+            return  # postings ride along; only element dots shrink the tombstone
+        self._discarded.setdefault(parts[0], []).append(_dot_from_parts(parts))
 
     def compact(self) -> Dict[bytes, List[Dot]]:
         """Run storage compaction; shrink tombstones by the discarded dots.

@@ -35,3 +35,13 @@ def as_dot(x: "Dot | Tuple[ActorId, int]") -> Dot:
 
 def sort_dots(dots: Iterable[Dot]) -> DotList:
     return tuple(sorted(as_dot(d) for d in dots))
+
+
+def dot_from_key(actor: ActorId, counter: int) -> Dot:
+    """Dot from decoded storage-key components.
+
+    The key codec round-trips string actors as utf-8 bytes; this is the one
+    place that mapping is undone, shared by element-key and posting-key
+    decoding so the two can never drift.
+    """
+    return Dot(actor.decode() if isinstance(actor, bytes) else actor, counter)

@@ -7,7 +7,8 @@ membership is a seek, range scans touch only their result, and cross-set
 joins are ordered-stream zippers.  This package is that query layer:
 
 * :mod:`repro.query.plan`     — logical plans (membership / range / count /
-  paginated scan / cross-set streaming joins);
+  paginated scan / cross-set streaming joins / secondary-index lookups and
+  ranges over :mod:`repro.index` postings);
 * :mod:`repro.query.cursor`   — opaque resumable pagination tokens;
 * :mod:`repro.query.batch`    — vectorised dot-visibility filtering that
   dispatches the ``kernels/dot_seen`` Pallas kernel over dense
@@ -20,10 +21,11 @@ Cluster-level scatter/gather with quorum merge and read-repair lives in
 """
 from .cursor import CursorError, decode_cursor, encode_cursor
 from .executor import QueryExecutor, QueryResult, QueryStats
-from .plan import Count, Join, Membership, Plan, PlanError, Range, Scan, validate
+from .plan import (Count, IndexLookup, IndexRange, Join, Membership, Plan,
+                   PlanError, Range, Scan, validate)
 
 __all__ = [
-    "Count", "CursorError", "Join", "Membership", "Plan", "PlanError",
-    "QueryExecutor", "QueryResult", "QueryStats", "Range", "Scan",
-    "decode_cursor", "encode_cursor", "validate",
+    "Count", "CursorError", "IndexLookup", "IndexRange", "Join", "Membership",
+    "Plan", "PlanError", "QueryExecutor", "QueryResult", "QueryStats",
+    "Range", "Scan", "decode_cursor", "encode_cursor", "validate",
 ]

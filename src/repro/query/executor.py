@@ -25,13 +25,17 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Iterator, List, Optional, Tuple
 
+import msgpack
+
 from ..core.bigset import BigsetVnode
 from ..core.clock import Clock
 from ..core.dots import Dot, DotList
+from ..storage.keycodec import successor_bytes
 from .batch import BatchVisibility
-from .cursor import encode_cursor, resume_point
-from .plan import Count, Join, Membership, Plan, PlanError, Range, Scan
-from .plan import cursor_scope, validate
+from .cursor import decode_cursor, encode_cursor, resume_point
+from .plan import (Count, IndexLookup, IndexRange, Join, Membership, Plan,
+                   PlanError, Range, Scan)
+from .plan import cursor_scope, index_span, validate
 
 DEFAULT_BATCH_SIZE = 1024
 # intersect: step this many elements before falling back to a storage seek
@@ -47,6 +51,8 @@ class QueryStats:
     keys_scanned: int = 0
     elements_emitted: int = 0
     batches: int = 0
+    keys_probed: int = 0   # point probes issued (membership / index lookup),
+                           # counted on hits AND misses
 
 
 @dataclass
@@ -57,6 +63,8 @@ class QueryResult:
     cursor: Optional[bytes] = None    # more pages exist iff not None
     clock: Optional[Clock] = None     # set-clock snapshot (quorum merge)
     stats: QueryStats = field(default_factory=QueryStats)
+    # IndexLookup/IndexRange only: (index_key, element, dots) in index order
+    index_entries: Optional[List[Tuple[bytes, bytes, DotList]]] = None
 
     @property
     def members(self) -> List[bytes]:
@@ -146,6 +154,100 @@ class _EntryStream:
             yield cur_el, tuple(cur_dots)
 
 
+class _IndexStream:
+    """Visible ``((index_key, element), dots)`` stream over a posting range.
+
+    Groups the raw posting stream by ``(index_key, element)`` and filters
+    each chunk's dots through one batched visibility dispatch — the same
+    Pallas ``dot_seen`` path element scans use, because a posting is live
+    iff its dot is live.  Each surviving group then fetches its element's
+    full surviving dot context from the element keyspace (a bounded seek),
+    so index results carry the same causal context a Range would return —
+    total cost O(matches + causal metadata).
+    """
+
+    def __init__(
+        self,
+        vnode: BigsetVnode,
+        set_name: bytes,
+        index_name: bytes,
+        vis: BatchVisibility,
+        stats: QueryStats,
+        start: Optional[bytes] = None,
+        end: Optional[bytes] = None,
+        at: Optional[Tuple[bytes, bytes]] = None,
+        after: Optional[Tuple[bytes, bytes]] = None,
+        batch_size: int = DEFAULT_BATCH_SIZE,
+    ):
+        self._vnode = vnode
+        self._set = set_name
+        self._index = index_name
+        self._vis = vis
+        self._stats = stats
+        self._end = end
+        self._batch = batch_size
+        self._gen = self._generate(start=start, at=at, after=after)
+        self.head: Optional[Tuple[Tuple[bytes, bytes], DotList]] = next(
+            self._gen, None)
+
+    def advance(self) -> Optional[Tuple[Tuple[bytes, bytes], DotList]]:
+        h = self.head
+        self.head = next(self._gen, None)
+        return h
+
+    def _generate(
+        self,
+        start: Optional[bytes],
+        at: Optional[Tuple[bytes, bytes]],
+        after: Optional[Tuple[bytes, bytes]],
+    ) -> Iterator[Tuple[Tuple[bytes, bytes], DotList]]:
+        raw = self._vnode.fold_postings(
+            self._set, self._index, start=start, end=self._end,
+            at=at, after=after)
+        cur: Optional[Tuple[bytes, bytes]] = None
+        cur_live = False
+        chunk_size = min(32, self._batch)
+        while True:
+            chunk: List[Tuple[bytes, bytes, Dot]] = []
+            for ik, el, dot in raw:
+                chunk.append((ik, el, dot))
+                if len(chunk) >= chunk_size:
+                    break
+            if not chunk:
+                break
+            chunk_size = min(chunk_size * 4, self._batch)
+            dead = self._vis.seen_mask([d for _, _, d in chunk])
+            self._stats.keys_scanned += len(chunk)
+            self._stats.batches += 1
+            for (ik, el, dot), is_dead in zip(chunk, dead):
+                if (ik, el) != cur:
+                    if cur is not None and cur_live:
+                        entry = self._entry(cur)
+                        if entry is not None:
+                            yield entry
+                    cur, cur_live = (ik, el), False
+                if not is_dead:
+                    cur_live = True
+        if cur is not None and cur_live:
+            entry = self._entry(cur)
+            if entry is not None:
+                yield entry
+
+    def _entry(
+        self, pos: Tuple[bytes, bytes]
+    ) -> Optional[Tuple[Tuple[bytes, bytes], DotList]]:
+        """Fetch the element's full surviving dots (the ISSUE's "then fetch
+        matching elements" step): one bounded seek into the element range."""
+        _ik, element = pos
+        dots = [
+            d for _e, d, _v in self._vnode.fold_raw(
+                self._set, start=element, end=successor_bytes(element))
+        ]
+        mask = self._vis.seen_mask(dots)
+        live = tuple(sorted(d for d, is_dead in zip(dots, mask) if not is_dead))
+        return (pos, live) if live else None
+
+
 class QueryExecutor:
     """Executes :mod:`repro.query.plan` plans against one vnode."""
 
@@ -178,12 +280,14 @@ class QueryExecutor:
             res = self._count(plan)
         elif isinstance(plan, Join):
             res = self._join(plan)
+        elif isinstance(plan, (IndexLookup, IndexRange)):
+            res = self._index(plan)
         else:  # pragma: no cover - validate() already rejects
             raise PlanError(f"unknown plan {type(plan).__name__}")
         io = meter.delta()
         res.stats.bytes_read = io.bytes_read
         res.stats.num_seeks = io.num_seeks
-        res.stats.elements_emitted = len(res.entries)
+        account_emitted(res)
         return res
 
     def entry_stream(
@@ -203,9 +307,30 @@ class QueryExecutor:
             self.vnode, set_name, vis, stats,
             start=start, end=end, after=after, batch_size=self.batch_size)
 
+    def index_stream(
+        self,
+        set_name: bytes,
+        index_name: bytes,
+        start: Optional[bytes] = None,
+        end: Optional[bytes] = None,
+        at: Optional[Tuple[bytes, bytes]] = None,
+        after: Optional[Tuple[bytes, bytes]] = None,
+        stats: Optional[QueryStats] = None,
+    ) -> _IndexStream:
+        """Visible posting-group stream (also driven by the cluster layer)."""
+        stats = stats if stats is not None else QueryStats()
+        vis = BatchVisibility(
+            self.vnode.read_tombstone(set_name),
+            use_pallas=self.use_pallas, interpret=self.interpret)
+        return _IndexStream(
+            self.vnode, set_name, index_name, vis, stats,
+            start=start, end=end, at=at, after=after,
+            batch_size=self.batch_size)
+
     # ---------------------------------------------------------------- shapes
     def _membership(self, plan: Membership) -> QueryResult:
         res = QueryResult(clock=self.vnode.read_clock(plan.set_name))
+        res.stats.keys_probed += 1  # misses must account the probed key too
         stream = self.entry_stream(
             plan.set_name, start=plan.element,
             end=plan.element + b"\x00", stats=res.stats)
@@ -245,6 +370,20 @@ class QueryExecutor:
         res.count = n
         return res
 
+    def _index(self, plan) -> QueryResult:
+        scope = cursor_scope(plan)
+        start, end = index_span(plan)
+        at, after = index_resume_point(plan.cursor, scope)
+        res = QueryResult(
+            clock=self.vnode.read_clock(plan.set_name), index_entries=[])
+        if isinstance(plan, IndexLookup):
+            res.stats.keys_probed += 1
+        stream = self.index_stream(
+            plan.set_name, plan.index, start=start, end=end,
+            at=at, after=after, stats=res.stats)
+        collect_index_page(stream, plan.limit, scope, res)
+        return res
+
     def _join(self, plan: Join) -> QueryResult:
         scope = cursor_scope(plan)
         start, after = resume_point(plan.cursor, scope)
@@ -264,6 +403,67 @@ def stream_entries(stream) -> Iterator[Tuple[bytes, DotList]]:
     """Drain a head/advance entry stream as an iterator."""
     while stream.head is not None:
         yield stream.advance()
+
+
+def account_emitted(res: QueryResult) -> None:
+    """Fill ``stats.elements_emitted`` for every plan shape.
+
+    ``Count`` streams the whole range without materialising entries, so its
+    emitted work is the count itself — leaving it at ``len(entries) == 0``
+    under-reports the query's output.
+    """
+    res.stats.elements_emitted = (
+        res.count if res.count is not None else len(res.entries))
+
+
+def encode_index_position(index_key: bytes, element: bytes) -> bytes:
+    """Pack an index cursor position — length-delimited, like plan scopes,
+    so ``(b"a:b", b"c")`` and ``(b"a", b"b:c")`` never alias."""
+    return msgpack.packb([index_key, element])
+
+
+def index_resume_point(
+    cursor: Optional[bytes], scope: bytes
+) -> "Tuple[Optional[Tuple[bytes, bytes]], Optional[Tuple[bytes, bytes]]]":
+    """Decode an index cursor into ``(at, after)`` posting-group positions."""
+    if cursor is None:
+        return None, None
+    pos, inclusive = decode_cursor(cursor, scope)
+    index_key, element = msgpack.unpackb(pos)
+    return ((index_key, element), None) if inclusive else (
+        None, (index_key, element))
+
+
+def collect_index_page(
+    stream,
+    limit: Optional[int],
+    scope: bytes,
+    res: QueryResult,
+) -> None:
+    """Pagination over ``((index_key, element), dots)`` streams.
+
+    Same rule as :func:`collect_page`, but the resume position is the
+    ``(index_key, element)`` group boundary — an element can recur under
+    several index keys, so the element alone cannot name where a page
+    stopped.  Fills both ``res.index_entries`` and the flat ``res.entries``.
+    """
+    if res.index_entries is None:
+        res.index_entries = []
+    while stream.head is not None:
+        (index_key, element), dots = stream.head
+        if limit is not None and len(res.index_entries) >= limit:
+            if res.index_entries:
+                last_ik, last_el, _ = res.index_entries[-1]
+                res.cursor = encode_cursor(
+                    scope, encode_index_position(last_ik, last_el))
+            else:
+                res.cursor = encode_cursor(
+                    scope, encode_index_position(index_key, element),
+                    inclusive=True)
+            return
+        stream.advance()
+        res.index_entries.append((index_key, element, dots))
+        res.entries.append((element, dots))
 
 
 def collect_page(

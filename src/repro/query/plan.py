@@ -19,13 +19,20 @@ Supported shapes:
 * :class:`Join` — cross-set streaming intersect/union/difference, a zipper
   over two lexicographic element streams (§4.4's streaming ORSWOT join
   generalised to two sets).
+* :class:`IndexLookup` — elements whose registered secondary index
+  (:mod:`repro.index`) produced exactly ``key``: a seek into the posting
+  range, never an element fold.
+* :class:`IndexRange` — elements whose index key falls in ``[start, end)``,
+  streamed in ``(index_key, element)`` order with limit/cursor pagination.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Union
+from typing import Optional, Tuple, Union
 
 import msgpack
+
+from ..index.postings import lookup_span
 
 JOIN_KINDS = ("intersect", "union", "difference")
 
@@ -80,7 +87,47 @@ class Join:
     cursor: Optional[bytes] = None
 
 
-Plan = Union[Membership, Range, Count, Scan, Join]
+@dataclass(frozen=True)
+class IndexLookup:
+    """Exact-match probe of one secondary index (``index key == key``)."""
+
+    set_name: bytes
+    index: bytes                    # index name (IndexSpec.name)
+    key: bytes                      # exact index key to match
+    limit: Optional[int] = None
+    cursor: Optional[bytes] = None
+
+
+@dataclass(frozen=True)
+class IndexRange:
+    """Index-ordered scan over ``[start, end)`` of one secondary index.
+
+    Results stream in ``(index_key, element)`` order — an element appears
+    once per matching index key (multi-valued extractors may match several
+    times), each carrying its full surviving dot context.
+    """
+
+    set_name: bytes
+    index: bytes
+    start: Optional[bytes] = None   # inclusive; None = index start
+    end: Optional[bytes] = None     # exclusive; None = index end
+    limit: Optional[int] = None
+    cursor: Optional[bytes] = None  # opaque resume token
+
+
+Plan = Union[Membership, Range, Count, Scan, Join, IndexLookup, IndexRange]
+IndexPlan = Union[IndexLookup, IndexRange]
+
+
+def index_span(plan: IndexPlan) -> Tuple[Optional[bytes], Optional[bytes]]:
+    """Normalise an index plan to its ``[start, end)`` index-key span.
+
+    A lookup is the degenerate range matching exactly ``key`` — both shapes
+    share one executor path, one cursor scope, and one quorum merge.
+    """
+    if isinstance(plan, IndexLookup):
+        return lookup_span(plan.key)
+    return plan.start, plan.end
 
 
 def validate(plan: Plan) -> Plan:
@@ -114,6 +161,21 @@ def validate(plan: Plan) -> Plan:
             raise PlanError("join needs two set names")
         if plan.limit is not None and plan.limit < 0:
             raise PlanError("join limit must be >= 0")
+    elif isinstance(plan, IndexLookup):
+        if not plan.set_name or not plan.index:
+            raise PlanError("index lookup needs a set name and an index name")
+        if plan.key is None:
+            raise PlanError("index lookup needs a key")
+        if plan.limit is not None and plan.limit < 0:
+            raise PlanError("index lookup limit must be >= 0")
+    elif isinstance(plan, IndexRange):
+        if not plan.set_name or not plan.index:
+            raise PlanError("index range needs a set name and an index name")
+        if plan.limit is not None and plan.limit < 0:
+            raise PlanError("index range limit must be >= 0")
+        if (plan.start is not None and plan.end is not None
+                and plan.start >= plan.end):
+            raise PlanError("empty index range: start >= end")
     else:
         raise PlanError(f"unknown plan type {type(plan).__name__}")
     return plan
@@ -133,4 +195,8 @@ def cursor_scope(plan: Plan) -> bytes:
         return msgpack.packb(["scan", plan.set_name])
     if isinstance(plan, Join):
         return msgpack.packb(["join", plan.kind, plan.left, plan.right])
+    if isinstance(plan, (IndexLookup, IndexRange)):
+        start, end = index_span(plan)
+        return msgpack.packb(
+            ["index", plan.set_name, plan.index, start or b"", end or b""])
     raise PlanError(f"plan {type(plan).__name__} does not paginate")

@@ -1,4 +1,4 @@
-"""Order-preserving tuple -> bytes key codec.
+"""Order-preserving tuple -> bytes key codec and the bigset key kinds.
 
 leveldb (and our LSM stand-in) orders keys lexicographically by raw bytes.
 Bigset requires element-keys to sort by ``(set, kind, element, actor,
@@ -6,6 +6,15 @@ counter)`` so that (a) a set's keyspace is one contiguous range, (b) the
 clock/tombstone keys sort *before* the element keys of the same set, and
 (c) element keys sort by element then dot — the property that enables the
 §4.4 streaming ORSWOT join and range queries.
+
+The *kind* byte partitions a set's keyspace into sub-ranges:
+
+* ``KIND_CLOCK``     — ``(set, 0)``: the serialized set-clock
+* ``KIND_TOMBSTONE`` — ``(set, 1)``: the serialized set-tombstone
+* ``KIND_ELEMENT``   — ``(set, 2, element, actor, counter)``: one per insert
+* ``KIND_INDEX``     — ``(set, 3, index_name, index_key, element, actor,
+  counter)``: secondary-index postings, mirroring element-keys dot-for-dot
+  (a posting is live iff its dot is live under the same set-tombstone)
 
 Components supported: ``bytes``/``str`` (escaped, terminator-based) and
 non-negative ``int`` (fixed 8-byte big-endian).  Escaping maps ``0x00`` to
@@ -15,6 +24,11 @@ from __future__ import annotations
 
 import struct
 from typing import Tuple
+
+KIND_CLOCK = 0
+KIND_TOMBSTONE = 1
+KIND_ELEMENT = 2
+KIND_INDEX = 3
 
 _STR_TAG = b"\x01"
 _INT_TAG = b"\x02"
@@ -69,3 +83,25 @@ def decode_key(key: bytes) -> Tuple:
         else:
             raise ValueError(f"bad tag byte {tag!r} at offset {i - 1}")
     return tuple(parts)
+
+
+def successor_bytes(b: bytes) -> bytes:
+    """The immediate successor of ``b`` in bytes order (``b + b"\\x00"``).
+
+    Used to turn an inclusive component bound into the exclusive bound of
+    the next value: in the order-preserving codec, ``encode_key((.., x))``
+    through ``encode_key((.., successor_bytes(x)))`` spans exactly the keys
+    whose component equals ``x`` plus all of their extensions.
+    """
+    return b + b"\x00"
+
+
+def prefix_bounds(parts: Tuple) -> Tuple[bytes, bytes]:
+    """Encoded ``[lo, hi)`` bounds covering every key extending ``parts``.
+
+    ``hi`` is the encoded prefix followed by ``0xff``: component tags are
+    ``0x01``/``0x02``, so no well-formed key extending the prefix can reach
+    it, and any key with a different component diverges before it.
+    """
+    lo = encode_key(parts)
+    return lo, lo + b"\xff"

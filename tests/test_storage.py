@@ -1,7 +1,9 @@
 """LSM store + order-preserving key codec tests."""
 from hypothesis import given, settings, strategies as st
 
-from repro.storage.keycodec import decode_key, encode_key
+from repro.storage.keycodec import (KIND_ELEMENT, KIND_INDEX, decode_key,
+                                    encode_key, prefix_bounds,
+                                    successor_bytes)
 from repro.storage.lsm import LsmStore
 
 key_part = st.one_of(
@@ -39,6 +41,25 @@ class TestKeyCodec:
         a = encode_key((b"a\x00b",))
         b = encode_key((b"a", b"b"))
         assert a != b and decode_key(a) == (b"a\x00b",)
+
+    @given(st.binary(max_size=8), st.binary(max_size=8), st.binary(max_size=4))
+    def test_prefix_bounds_cover_exactly_extensions(self, s, other, tail):
+        """[lo, hi) of a prefix contains every extension of it and no key
+        with a different component at that position."""
+        prefix = (s, KIND_INDEX)
+        lo, hi = prefix_bounds(prefix)
+        assert lo <= encode_key(prefix + (tail,)) < hi
+        assert lo <= encode_key(prefix + (tail, other, 7)) < hi
+        inside = lo <= encode_key((s, KIND_ELEMENT, tail)) < hi
+        assert not inside  # sibling kind stays outside
+        if other != s:
+            assert not lo <= encode_key((other, KIND_INDEX, tail)) < hi
+
+    @given(st.binary(max_size=8), st.binary(min_size=1, max_size=8))
+    def test_successor_bytes_is_immediate(self, b, ext):
+        succ = successor_bytes(b)
+        assert b < succ
+        assert succ <= b + ext  # nothing fits strictly between b and b+nul
 
 
 class TestLsm:

@@ -1,0 +1,108 @@
+"""Serve layer: wire-protocol throughput/latency + backpressure saturation.
+
+Measures the full client→service→cluster→LSM path of
+:mod:`repro.serve.bigset_service`: batch inserts, point membership probes,
+and cursor-paginated scans (all msgpack-round-tripped, exactly what a
+remote client pays), plus a *saturation* row where the byte budget is
+deliberately tiny so admission control engages — the derived column
+records how many pages were rejected and that every rejected page was
+resumed from its preserved cursor (``resumed=all``).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.cluster.clusters import BigsetCluster
+from repro.query.plan import Membership, Scan
+from repro.serve.bigset_service import (Backpressure, BigsetClient,
+                                        BigsetService, ServiceConfig)
+
+SET = b"servebench"
+PAGE = 250
+
+
+def build(card: int):
+    cluster = BigsetCluster(3)
+    service = BigsetService(cluster)
+    client = BigsetClient(service)
+    t0 = time.perf_counter()
+    for base in range(0, card, 1000):
+        client.batch(SET, [["add", b"%08d" % i]
+                           for i in range(base, min(base + 1000, card))])
+    insert_us = (time.perf_counter() - t0) / card * 1e6
+    return cluster, service, client, insert_us
+
+
+def bench_point(client: BigsetClient, card: int, n_ops: int, rng) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n_ops):
+        el = b"%08d" % int(rng.integers(card))
+        client.query(Membership(SET, el))
+    return (time.perf_counter() - t0) / n_ops * 1e6
+
+
+def bench_scan(client: BigsetClient, card: int):
+    pages = 0
+    page_bytes = 0
+    seen = 0
+    t0 = time.perf_counter()
+    for page in client.pages(Scan(SET, page_size=PAGE)):
+        pages += 1
+        seen += len(page.entries)
+        page_bytes += page.stats["bytes_read"]
+    dt = time.perf_counter() - t0
+    assert seen == card, (seen, card)
+    return dt / pages * 1e6, page_bytes // pages
+
+
+def bench_saturation(cluster: BigsetCluster, card: int):
+    """Scan through a budget sized to a couple of pages; a fake clock makes
+    the backoff free, so the row isolates admission-control overhead."""
+    clk = [0.0]
+    service = BigsetService(
+        cluster,
+        ServiceConfig(byte_budget=2 * PAGE * 64, budget_window=1.0,
+                      lease_ttl=1e9),
+        clock=lambda: clk[0])
+    client = BigsetClient(service)
+
+    def advance(seconds: float) -> None:
+        clk[0] += seconds + 1e-3
+
+    seen = pages = 0
+    t0 = time.perf_counter()
+    for page in client.pages(Scan(SET, page_size=PAGE), sleep=advance):
+        pages += 1
+        seen += len(page.entries)
+    dt = time.perf_counter() - t0
+    assert seen == card, (seen, card)  # rejection never loses a cursor
+    return dt / pages * 1e6, service.rejections
+
+
+def main(cards=(1000, 5000), n_ops=100, quick=False) -> List[str]:
+    if quick:
+        cards, n_ops = (500,), 30
+    rows = []
+    for card in cards:
+        rng = np.random.default_rng(11)
+        cluster, service, client, insert_us = build(card)
+        rows.append(f"serve/insert/{card},{insert_us:.1f},card={card}")
+        member_us = bench_point(client, card, n_ops, rng)
+        rows.append(f"serve/membership/{card},{member_us:.1f},card={card}")
+        page_us, bytes_per_page = bench_scan(client, card)
+        rows.append(
+            f"serve/scan_page/{card},{page_us:.1f},"
+            f"bytes_per_page={bytes_per_page}")
+        sat_us, rejected = bench_saturation(cluster, card)
+        rows.append(
+            f"serve/saturation/{card},{sat_us:.1f},"
+            f"rejected={rejected};resumed=all")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

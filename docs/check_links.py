@@ -1,0 +1,55 @@
+#!/usr/bin/env python
+"""Markdown link-check: every relative link in docs/ + README must resolve.
+
+External links (http/https/mailto) and pure fragments are skipped — this
+guards the cheap, high-value failure mode: a doc pointing at a file that
+was renamed or never existed.  Exits non-zero listing every broken link.
+
+Usage:
+  python docs/check_links.py [file-or-dir ...]   # default: README.md docs/
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def broken_links(path: Path) -> list:
+    bad = []
+    for target in LINK.findall(path.read_text()):
+        if target.startswith(SKIP):
+            continue
+        rel = target.split("#", 1)[0]
+        if rel and not (path.parent / rel).exists():
+            bad.append(target)
+    return bad
+
+
+def collect(roots) -> list:
+    files = []
+    for root in roots:
+        p = Path(root)
+        files.extend(sorted(p.rglob("*.md")) if p.is_dir() else [p])
+    return files
+
+
+def main(argv=None) -> int:
+    roots = argv if argv else [str(REPO / "README.md"), str(REPO / "docs")]
+    files = collect(roots)
+    failures = {f: broken_links(f) for f in files}
+    failures = {f: b for f, b in failures.items() if b}
+    for f, bad in failures.items():
+        print(f"{f}: broken links {bad}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+    print(f"link-check: {len(files)} markdown files ok")
+    return len(files)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

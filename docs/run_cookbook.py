@@ -1,0 +1,50 @@
+#!/usr/bin/env python
+"""Doctest-style runner: execute every ```python fence in a docs page.
+
+The cookbook's blocks run top to bottom in ONE shared namespace — later
+blocks may use names earlier blocks defined, exactly as a reader pasting
+them into a REPL would experience.  Any failing assert or exception fails
+the run (CI docs job and ``tests/test_docs.py`` both call this), so the
+documentation cannot rot away from the code it documents.
+
+Usage:
+  python docs/run_cookbook.py [page.md ...]     # default: QUERY_COOKBOOK.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+FENCE = re.compile(r"```python\n(.*?)```", re.S)
+
+if str(REPO / "src") not in sys.path:
+    sys.path.insert(0, str(REPO / "src"))
+
+
+def run_file(path) -> int:
+    """Execute a page's python blocks; returns how many ran."""
+    text = Path(path).read_text()
+    blocks = FENCE.findall(text)
+    if not blocks:
+        raise SystemExit(f"{path}: no ```python blocks found")
+    namespace: dict = {"__name__": "__cookbook__"}
+    for i, block in enumerate(blocks, 1):
+        # compile with a per-block filename so tracebacks point at the page
+        code = compile(block, f"{path}#block{i}", "exec")
+        exec(code, namespace)
+        print(f"  ok: {Path(path).name} block {i} "
+              f"({len(block.strip().splitlines())} lines)")
+    return len(blocks)
+
+
+def main(argv=None) -> int:
+    paths = argv if argv else [str(REPO / "docs" / "QUERY_COOKBOOK.md")]
+    total = sum(run_file(p) for p in paths)
+    print(f"cookbook: {total} blocks executed green")
+    return total
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

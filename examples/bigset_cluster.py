@@ -2,13 +2,17 @@
 
 Two "sides" of a partitioned 4-replica cluster take writes independently
 (including a remove of an element the other side concurrently re-adds),
-then heal via anti-entropy — all replicas converge, add-wins.
+then heal via anti-entropy — all replicas converge, add-wins.  Client
+traffic (writes, membership with causal context, the final scan) goes
+through the serve layer's wire protocol.
 
 Run:  PYTHONPATH=src python examples/bigset_cluster.py
 """
 from repro.cluster.antientropy import sync
 from repro.cluster.clusters import BigsetCluster
 from repro.cluster.sim import Network
+from repro.query.plan import Scan
+from repro.serve.bigset_service import BigsetClient, BigsetService
 
 S = b"cart"
 
@@ -16,15 +20,18 @@ S = b"cart"
 def main():
     net = Network(seed=7, drop_prob=0.0)
     big = BigsetCluster(4, net=net, sync=False)  # manual delivery
+    client = BigsetClient(BigsetService(big))
 
-    big.add(S, b"book", 0)
+    client.insert(S, b"book")
     big.settle()
     print("before partition:", sorted(big.value(S, r=4)))
 
     # ---- partition: {0,1} | {2,3}; deltas between sides are dropped ------
     big.net.drop_prob = 1.0  # total partition (simplified: drop everything)
-    _, ctx = big.vnodes[big.actors[0]].is_member(S, b"book")
-    big.remove(S, b"book", 0, ctx)              # side A removes the book
+    # side A reads book's causal context (r=1: only its own side answers),
+    # then removes exactly what it observed
+    _, ctx = client.membership(S, b"book", r=1)
+    client.remove(S, b"book", ctx=ctx)          # side A removes the book
     big.add(S, b"book", 2)                      # side B re-adds concurrently
     big.add(S, b"pen", 3)
     big.net.queue.clear()
@@ -44,6 +51,12 @@ def main():
     assert all(v == views[0] for v in views), "replicas diverged!"
     assert b"book" in set(views[0]), "add-wins violated"
     print("converged; concurrent re-add beat the remove (add-wins) ✓")
+
+    # the healed set, served: a paginated scan over the full quorum
+    members = [el for page in client.pages(Scan(S, page_size=1), r=4)
+               for el in page.members]
+    assert members == views[0], (members, views[0])
+    print("served scan agrees with every replica ✓")
 
     # storage hygiene after churn
     for vn in vns:

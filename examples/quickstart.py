@@ -1,32 +1,42 @@
 """Quickstart: the bigset CRDT public API in 60 lines.
 
+Writes and queries go through the serve layer (the wire protocol a remote
+client would speak); the cluster/vnode internals appear only where the
+paper's cost claims are being shown off.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
 from repro.cluster.clusters import BigsetCluster, RiakSetCluster
 from repro.cluster.antientropy import sync
 from repro.core.bigset import BigsetVnode
+from repro.query.plan import Range
+from repro.serve.bigset_service import BigsetClient, BigsetService
 
 S = b"fruits"
 
 
 def main():
-    # --- a 3-replica bigset cluster --------------------------------------
+    # --- a 3-replica bigset cluster behind the query service --------------
     big = BigsetCluster(3)
-    for fruit in (b"apple", b"banana", b"cherry", b"durian"):
-        big.add(S, fruit)
-    big.remove(S, b"durian")
+    client = BigsetClient(BigsetService(big))
+    client.batch(S, [["add", f]
+                     for f in (b"apple", b"banana", b"cherry", b"durian")])
+
+    # observed-remove: read the causal context, hand it back (§4.3.2)
+    present, ctx = client.membership(S, b"durian")
+    assert present
+    client.remove(S, b"durian", ctx=ctx)
     print("value (quorum r=2):", sorted(big.value(S, r=2)))
 
     # membership / range queries without reading the whole set (§4.4)
-    vn = big.vnodes[big.actors[0]]
-    print("is_member(banana):", vn.is_member(S, b"banana")[0])
-    print("range from 'b', 2:", vn.range_query(S, b"b", 2))
+    print("is_member(banana):", client.membership(S, b"banana")[0])
+    print("range from 'b', 2:",
+          client.query(Range(S, start=b"b", limit=2)).members)
 
     # write cost is causal-metadata-sized, not set-sized (§4.3)
+    vn = big.vnodes[big.actors[0]]
     before = vn.store.stats.snapshot()
-    big.add(S, b"elderberry")
+    client.insert(S, b"elderberry")
     d = vn.store.stats.delta(before)
     print(f"one insert cost: read {d.bytes_read}B, wrote {d.bytes_written}B")
 

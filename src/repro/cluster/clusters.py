@@ -36,6 +36,25 @@ from ..storage.lsm import LsmStore
 from .sim import Message, Network
 
 
+# ------------------------------------------------------------ serve sessions
+class ClusterSession:
+    """Hook surface the serve layer attaches to cluster entry points.
+
+    A session observes — never alters — what its requests cost: the service
+    (:mod:`repro.serve.bigset_service`) feeds its byte-budget admission
+    control from ``observe_query`` (per-page :class:`~repro.query.executor.
+    QueryStats`, themselves fed from storage IoStats) and its write
+    accounting from ``observe_mutation`` (delta sizes).  The default
+    implementation is a no-op so library callers pay nothing.
+    """
+
+    def observe_query(self, plan, result: "QueryResult") -> None:
+        pass
+
+    def observe_mutation(self, delta) -> None:
+        pass
+
+
 # --------------------------------------------------------------- orswot codec
 def orswot_to_bytes(s: Orswot) -> bytes:
     return msgpack.packb(
@@ -190,11 +209,21 @@ class BigsetCluster(_ClusterBase):
         }
 
     def add(self, set_name: bytes, element: bytes, coordinator: int = 0,
-            ctx: Iterable[Dot] = (), value: bytes = b"") -> None:
+            ctx: Iterable[Dot] = (), value: bytes = b"",
+            session: Optional[ClusterSession] = None) -> InsertDelta:
+        """Coordinate an insert; returns the minted delta.
+
+        The delta's ``dot`` is the insert's causal identity — the serve
+        layer round-trips it to clients as the context for a later remove
+        or replacing add.
+        """
         actor = self.actors[coordinator]
         delta = self.vnodes[actor].coordinate_insert(
             set_name, element, ctx, value=value)
         self._replicate(actor, delta, delta.size_bytes())
+        if session is not None:
+            session.observe_mutation(delta)
+        return delta
 
     def register_index(self, set_name: bytes, spec: IndexSpec,
                        backfill: bool = True) -> int:
@@ -205,18 +234,49 @@ class BigsetCluster(_ClusterBase):
             for vn in self.vnodes.values())
 
     def remove(self, set_name: bytes, element: bytes, coordinator: int = 0,
-               ctx: Optional[Iterable[Dot]] = None) -> None:
+               ctx: Optional[Iterable[Dot]] = None,
+               session: Optional[ClusterSession] = None
+               ) -> Optional[RemoveDelta]:
         """Observed-remove: ctx defaults to a local membership probe (§4.3.2
-        — "the client **must** provide a context for a remove")."""
+        — "the client **must** provide a context for a remove").  Returns
+        the shipped delta, or None when there was nothing to remove."""
         actor = self.actors[coordinator]
         vn = self.vnodes[actor]
         if ctx is None:
             _, ctx = vn.is_member(set_name, element)
         ctx = tuple(ctx)
         if not ctx:
-            return
+            return None
         delta = vn.coordinate_remove(set_name, ctx)
         self._replicate(actor, delta, delta.size_bytes())
+        if session is not None:
+            session.observe_mutation(delta)
+        return delta
+
+    def mutate(self, set_name: bytes, ops: Sequence[Tuple], coordinator: int = 0,
+               session: Optional[ClusterSession] = None) -> List:
+        """Batch mutation entry point (the serve layer's write path).
+
+        ``ops`` is a sequence of ``("add", element[, value[, ctx]])`` and
+        ``("remove", element[, ctx])`` tuples, applied in order through one
+        coordinator so a remove can observe an earlier add in the same
+        batch.  Returns the per-op deltas (None for no-op removes).
+        """
+        out: List = []
+        for op in ops:
+            kind, element = op[0], op[1]
+            if kind == "add":
+                value = op[2] if len(op) > 2 else b""
+                ctx = op[3] if len(op) > 3 else ()
+                out.append(self.add(set_name, element, coordinator, ctx=ctx,
+                                    value=value, session=session))
+            elif kind == "remove":
+                ctx = op[2] if len(op) > 2 else None
+                out.append(self.remove(set_name, element, coordinator,
+                                       ctx=ctx, session=session))
+            else:
+                raise ValueError(f"unknown mutation op {kind!r}")
+        return out
 
     def _handle(self, msg: Message) -> None:
         vn = self.vnodes[msg.dst]
@@ -238,8 +298,8 @@ class BigsetCluster(_ClusterBase):
         return self.read(set_name, r).value()
 
     # -------------------------------------------------------------- queries
-    def query(self, plan, r: Optional[int] = None, repair: bool = True
-              ) -> QueryResult:
+    def query(self, plan, r: Optional[int] = None, repair: bool = True,
+              session: Optional[ClusterSession] = None) -> QueryResult:
         """Coverage-query path: scatter a plan to ``r`` replicas, stream the
         partial results through a quorum merge, and read-repair stragglers.
 
@@ -248,7 +308,9 @@ class BigsetCluster(_ClusterBase):
         :mod:`repro.core.streaming` with per-replica dot attribution so any
         replica missing a surviving dot gets the element-key delta replayed
         to it (read repair) — anti-entropy rides on the query workload.
-        ``r`` defaults to a majority quorum.
+        ``r`` defaults to a majority quorum.  A ``session``
+        (:class:`ClusterSession`) observes the result post-accounting — the
+        serve layer's backpressure budget hangs off this hook.
         """
         query_plan.validate(plan)
         if r is None:
@@ -278,6 +340,8 @@ class BigsetCluster(_ClusterBase):
             res.stats.bytes_read += io.bytes_read
             res.stats.num_seeks += io.num_seeks
         account_emitted(res)
+        if session is not None:
+            session.observe_query(plan, res)
         return res
 
     def _executors(self, actors) -> List[QueryExecutor]:

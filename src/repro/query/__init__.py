@@ -19,13 +19,17 @@ joins are ordered-stream zippers.  This package is that query layer:
 Cluster-level scatter/gather with quorum merge and read-repair lives in
 :meth:`repro.cluster.clusters.BigsetCluster.query`.
 """
-from .cursor import CursorError, decode_cursor, encode_cursor
+from .cursor import (CursorError, LeaseError, decode_cursor, encode_cursor,
+                     unwrap_lease, wrap_lease)
 from .executor import QueryExecutor, QueryResult, QueryStats
 from .plan import (Count, IndexLookup, IndexRange, Join, Membership, Plan,
-                   PlanError, Range, Scan, validate)
+                   PlanError, Range, Scan, plan_from_wire, plan_to_wire,
+                   validate)
 
 __all__ = [
-    "Count", "CursorError", "IndexLookup", "IndexRange", "Join", "Membership",
-    "Plan", "PlanError", "QueryExecutor", "QueryResult", "QueryStats",
-    "Range", "Scan", "decode_cursor", "encode_cursor", "validate",
+    "Count", "CursorError", "IndexLookup", "IndexRange", "Join", "LeaseError",
+    "Membership", "Plan", "PlanError", "QueryExecutor", "QueryResult",
+    "QueryStats", "Range", "Scan", "decode_cursor", "encode_cursor",
+    "plan_from_wire", "plan_to_wire", "unwrap_lease", "validate",
+    "wrap_lease",
 ]

@@ -22,10 +22,15 @@ from typing import Optional
 import msgpack
 
 CURSOR_VERSION = 1
+LEASE_VERSION = 1
 
 
 class CursorError(ValueError):
     """Malformed, corrupted, or mismatched cursor token."""
+
+
+class LeaseError(CursorError):
+    """Lease token problems: wrong session, corruption, or expiry."""
 
 
 def encode_cursor(scope: bytes, element: bytes, inclusive: bool = False) -> bytes:
@@ -61,6 +66,44 @@ def decode_cursor(token: bytes, scope: bytes) -> "tuple[bytes, bool]":
     if tok_scope != scope:
         raise CursorError("cursor was minted for a different query")
     return element, bool(inclusive)
+
+
+def wrap_lease(session_id: bytes, cursor: bytes, nonce: int = 0) -> bytes:
+    """Bind a raw cursor to one service session as an opaque lease token.
+
+    The serve layer never hands raw cursors to clients: it wraps them so a
+    token minted for one session cannot resume another session's scan (the
+    lease *deadline* lives server-side in the service's lease table — the
+    token only carries the binding).  ``nonce`` keeps tokens distinct even
+    when cursors collide byte-for-byte: two identical scans in one session
+    must hold two independent leases, or releasing one would strand the
+    other.  Same armor as cursors: msgpack payload + crc32, urlsafe base64.
+    """
+    payload = msgpack.packb([LEASE_VERSION, session_id, cursor, nonce])
+    crc = struct.pack(">I", zlib.crc32(payload))
+    return base64.urlsafe_b64encode(payload + crc)
+
+
+def unwrap_lease(token: bytes, session_id: bytes) -> bytes:
+    """Validate a lease token against ``session_id``; return the raw cursor."""
+    try:
+        raw = base64.urlsafe_b64decode(token)
+    except (binascii.Error, ValueError) as e:
+        raise LeaseError(f"undecodable lease: {e}") from None
+    if len(raw) < 5:
+        raise LeaseError("lease too short")
+    payload, crc = raw[:-4], raw[-4:]
+    if struct.pack(">I", zlib.crc32(payload)) != crc:
+        raise LeaseError("lease checksum mismatch")
+    try:
+        version, tok_session, cursor, _nonce = msgpack.unpackb(payload)
+    except Exception as e:
+        raise LeaseError(f"malformed lease payload: {e}") from None
+    if version != LEASE_VERSION:
+        raise LeaseError(f"unsupported lease version {version}")
+    if tok_session != session_id:
+        raise LeaseError("lease belongs to a different session")
+    return cursor
 
 
 def resume_point(

@@ -181,6 +181,68 @@ def validate(plan: Plan) -> Plan:
     return plan
 
 
+# ------------------------------------------------------------- wire codec
+# The serve layer (:mod:`repro.serve.bigset_service`) ships plans between
+# client and service as a versioned msgpack envelope: ``[version, shape,
+# fields]``.  Field maps (not positional tuples) so shapes can grow fields
+# without breaking older tokensets; bytes stay bytes under msgpack, so set
+# names and range bounds round-trip exactly.
+PLAN_WIRE_VERSION = 1
+
+_WIRE_SHAPES = {
+    Membership: "membership",
+    Range: "range",
+    Count: "count",
+    Scan: "scan",
+    Join: "join",
+    IndexLookup: "index_lookup",
+    IndexRange: "index_range",
+}
+_SHAPE_TYPES = {tag: cls for cls, tag in _WIRE_SHAPES.items()}
+
+
+def plan_to_wire(plan: Plan) -> bytes:
+    """Encode a validated plan as its wire envelope (every shape)."""
+    validate(plan)
+    shape = _WIRE_SHAPES[type(plan)]
+    fields = {
+        f: getattr(plan, f) for f in type(plan).__dataclass_fields__
+    }
+    return msgpack.packb([PLAN_WIRE_VERSION, shape, fields])
+
+
+def plan_from_wire(blob: bytes) -> Plan:
+    """Decode and validate a wire envelope back into a plan.
+
+    Raises :class:`PlanError` for anything malformed — undecodable bytes,
+    unknown versions or shapes, missing or extra fields — so the serve
+    layer can map every bad request to one error path.
+    """
+    try:
+        envelope = msgpack.unpackb(blob)
+    except Exception as e:
+        raise PlanError(f"undecodable plan envelope: {e}") from None
+    if not (isinstance(envelope, (list, tuple)) and len(envelope) == 3):
+        raise PlanError(f"malformed plan envelope: {envelope!r}")
+    version, shape, fields = envelope
+    if version != PLAN_WIRE_VERSION:
+        raise PlanError(f"unsupported plan wire version {version!r}")
+    cls = _SHAPE_TYPES.get(shape)
+    if cls is None:
+        raise PlanError(f"unknown plan shape {shape!r}")
+    if not isinstance(fields, dict):
+        raise PlanError("plan fields must be a map")
+    known = set(cls.__dataclass_fields__)
+    unknown = set(fields) - known
+    if unknown:
+        raise PlanError(f"unknown {shape} fields {sorted(unknown)}")
+    try:
+        plan = cls(**fields)
+    except TypeError as e:
+        raise PlanError(f"bad {shape} fields: {e}") from None
+    return validate(plan)
+
+
 def cursor_scope(plan: Plan) -> bytes:
     """The scope a cursor is valid for — tokens must not cross query shapes.
 

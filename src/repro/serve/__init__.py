@@ -1,1 +1,8 @@
+from .bigset_service import (Backpressure, BigsetClient, BigsetService, Page,
+                             ServiceConfig, ServiceError)
 from .engine import Request, ServeEngine
+
+__all__ = [
+    "Backpressure", "BigsetClient", "BigsetService", "Page", "Request",
+    "ServeEngine", "ServiceConfig", "ServiceError",
+]

@@ -1,0 +1,70 @@
+"""Join strategy benchmark: zipper vs gallop vs planner across skew.
+
+The planner's bet (``repro/query/planner.py``) is that a skewed intersect
+should cost the *smaller* side, not the sum of both.  This benchmark makes
+that a number: intersect latency and per-query IoStats (bytes read,
+keys scanned) for the forced zipper, the forced gallop, and the planner's
+own choice, at 1:1, 1:100, and 1:10000 cardinality ratios.  At 1:1 the
+planner must stay with the zipper (galloping a balanced join pays a seek
+per element for nothing); past the crossover it must flip to gallop and
+hold keys_scanned flat while the zipper row grows with the big side.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core.bigset import BigsetVnode
+from repro.query import Join, QueryExecutor
+from repro.storage.lsm import LsmStore
+
+SMALL = b"jsmall"
+BIG = b"jbig"
+
+
+def build(small_card: int, ratio: int) -> BigsetVnode:
+    """SMALL ⊂ BIG with |BIG| = ratio × |SMALL| (intersection = SMALL)."""
+    vn = BigsetVnode("a", LsmStore(memtable_limit=1 << 20))
+    big_card = small_card * ratio
+    for i in range(big_card):
+        vn.coordinate_insert(BIG, b"%08d" % i)
+    step = max(1, big_card // small_card)
+    for i in range(0, big_card, step):
+        vn.coordinate_insert(SMALL, b"%08d" % i)
+    vn.store.flush()  # one sorted run: stats and seeks are bisects
+    return vn
+
+
+def _time(fn, n_ops: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n_ops):
+        fn()
+    return (time.perf_counter() - t0) / n_ops * 1e6  # us/op
+
+
+def main(quick: bool = False) -> List[str]:
+    small_card = 4 if quick else 16
+    ratios = (1, 100, 10_000)
+    n_ops = 3 if quick else 8
+    rows = []
+    for ratio in ratios:
+        vn = build(small_card, ratio)
+        ex = QueryExecutor(vn)
+        for name, strategy in (("zipper", "zipper"), ("gallop", "gallop"),
+                               ("planner", None)):
+            plan = Join("intersect", SMALL, BIG, strategy=strategy)
+            res = ex.execute(plan)
+            us = _time(lambda p=plan: ex.execute(p), n_ops)
+            rows.append(
+                f"joins/{name}/intersect/1:{ratio},{us:.1f},"
+                f"strategy={res.stats.strategy}")
+            rows.append(
+                f"joins/{name}/intersect_bytes/1:{ratio},"
+                f"{res.stats.bytes_read},"
+                f"keys_scanned={res.stats.keys_scanned}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

@@ -14,17 +14,19 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: writes,reads,queries,serve,mixed,ckpt,"
-                         "kernels,roofline")
+                    help="comma list: writes,reads,queries,joins,serve,mixed,"
+                         "ckpt,kernels,roofline")
     args = ap.parse_args(argv)
 
-    from . import (bench_checkpoint, bench_kernels, bench_mixed, bench_queries,
-                   bench_reads, bench_serve, bench_writes, roofline)
+    from . import (bench_checkpoint, bench_joins, bench_kernels, bench_mixed,
+                   bench_queries, bench_reads, bench_serve, bench_writes,
+                   roofline)
 
     sections = {
         "writes": lambda: bench_writes.main(quick=args.quick),     # Tab1/Fig1-3
         "reads": lambda: bench_reads.main(quick=args.quick),       # Tab2/Fig4-5
         "queries": lambda: bench_queries.main(quick=args.quick),   # §4.4
+        "joins": lambda: bench_joins.main(quick=args.quick),       # planner
         "serve": lambda: bench_serve.main(quick=args.quick),       # serve layer
         "mixed": lambda: bench_mixed.main(quick=args.quick),       # Fig6
         "ckpt": lambda: bench_checkpoint.main(quick=args.quick),   # framework

@@ -30,8 +30,9 @@ from ..query import cursor as query_cursor
 from ..query import plan as query_plan
 from ..query.executor import (QueryExecutor, QueryResult, QueryStats,
                               account_emitted, collect_index_page,
-                              collect_page, index_resume_point,
+                              collect_page, gallop_join, index_resume_point,
                               stream_entries, zipper_join)
+from ..query.planner import GALLOP, choose_join, quorum_side_stats
 from ..storage.lsm import LsmStore
 from .sim import Message, Network
 
@@ -484,17 +485,76 @@ class BigsetCluster(_ClusterBase):
         return res
 
     def _q_join(self, plan, actors, repair) -> QueryResult:
+        """Quorum-merged cross-set join, strategy chosen by the planner.
+
+        Statistics aggregate each side's element range across the quorum's
+        stores (the skew ratio is what the cost model compares).  A gallop
+        drives the smaller side's quorum stream and probes the larger side
+        replica-by-replica through the same ORSWOT merge rule — probed
+        elements still get read repair, so galloping trades only the
+        *incidental* repair of skipped non-matches, never correctness.
+        """
         scope = query_plan.cursor_scope(plan)
         start, after = query_cursor.resume_point(plan.cursor, scope)
         res = QueryResult()
-        left = self._quorum_stream(plan.left, actors, start, None, after,
-                                   repair, stats=res.stats)
-        right = self._quorum_stream(plan.right, actors, start, None, after,
-                                    repair, stats=res.stats)
-        res.clock = left.clock.join(right.clock)
-        collect_page(
-            zipper_join(plan.kind, left, right), plan.limit, scope, res)
+        stores = [self.vnodes[a].store for a in actors]
+        choice = choose_join(
+            plan.kind,
+            quorum_side_stats(stores, plan.left),
+            quorum_side_stats(stores, plan.right),
+            forced=plan.strategy)
+        res.stats.strategy = choice.strategy
+        if choice.strategy == GALLOP:
+            drive_name, probe_name = (
+                (plan.left, plan.right) if choice.drive == "left"
+                else (plan.right, plan.left))
+            drive = self._quorum_stream(drive_name, actors, start, None,
+                                        after, repair, stats=res.stats)
+            probe, probe_clock = self._quorum_probe(
+                probe_name, actors, repair, res.stats)
+            res.clock = drive.clock.join(probe_clock)
+            entries = gallop_join(plan.kind, drive, probe, choice.drive)
+        else:
+            left = self._quorum_stream(plan.left, actors, start, None, after,
+                                       repair, stats=res.stats)
+            right = self._quorum_stream(plan.right, actors, start, None,
+                                        after, repair, stats=res.stats)
+            res.clock = left.clock.join(right.clock)
+            entries = zipper_join(plan.kind, left, right)
+        collect_page(entries, plan.limit, scope, res)
         return res
+
+    def _quorum_probe(self, set_name, actors, repair, stats: QueryStats):
+        """Quorum point probe for gallop joins: (probe_fn, joined clock).
+
+        Probes every quorum replica for one element (a bounded seek each),
+        merges the surviving dots with the same optimized-OR-set rule the
+        streaming merge uses, and read-repairs replicas missing a
+        surviving dot — the membership path's semantics, packaged as the
+        gallop join's larger-side primitive.
+        """
+        clocks = [self.vnodes[a].read_clock(set_name) for a in actors]
+        probes = [
+            ex.element_probe(set_name, stats) for ex in self._executors(actors)
+        ]
+        clock = Clock.zero()
+        for c in clocks:
+            clock = clock.join(c)
+
+        def probe(element):
+            per_stream = [
+                frozenset(ds) if ds else None
+                for ds in (p(element) for p in probes)
+            ]
+            dots = merge_entry(per_stream, clocks)
+            if not dots:
+                return None
+            if repair:
+                self._repair(set_name, element, dots, per_stream, clocks,
+                             actors)
+            return tuple(sorted(dots))
+
+        return probe, clock
 
     def compact_all(self) -> None:
         for vn in self.vnodes.values():

@@ -31,7 +31,7 @@ from ..index.spec import IndexSpec
 from ..storage.keycodec import (KIND_CLOCK, KIND_ELEMENT, KIND_INDEX,
                                 KIND_TOMBSTONE, decode_key, encode_key)
 from ..storage.lsm import TOMBSTONE as STORE_TOMBSTONE
-from ..storage.lsm import LsmStore
+from ..storage.lsm import LsmIterator, LsmStore
 from .clock import Clock
 from .dots import ActorId, Dot, dot_from_key
 from .orswot import Orswot
@@ -147,6 +147,45 @@ class RemoveDelta:
 
 
 Delta = InsertDelta  # union alias for typing docs; removes use RemoveDelta
+
+
+# ------------------------------------------------------------ element cursor
+class ElementCursor:
+    """Positional ``(element, dot, value)`` cursor over one set's element
+    range.
+
+    Wraps a :class:`~repro.storage.lsm.LsmIterator`: iterating streams
+    decoded element-keys in order; :meth:`seek` repositions at the first
+    key of ``element`` in O(log n) per level.  Keys skipped by a seek are
+    never touched — no ``bytes_read``, no scan work — which is what makes
+    a gallop join's probes cost O(probe), not O(gap).
+    """
+
+    __slots__ = ("_set", "_it")
+
+    def __init__(
+        self,
+        store: LsmStore,
+        set_name: bytes,
+        start: Optional[bytes] = None,
+        end: Optional[bytes] = None,
+        after: Optional[bytes] = None,
+    ):
+        self._set = set_name
+        lo, hi = element_bounds(set_name, start, end, after)
+        self._it = LsmIterator(store, lo, hi)
+
+    def seek(self, element: bytes) -> None:
+        """Reposition at the first key of ``element`` (or the next one)."""
+        self._it.seek(encode_key((self._set, KIND_ELEMENT, element)))
+
+    def __iter__(self) -> "ElementCursor":
+        return self
+
+    def __next__(self) -> Tuple[bytes, Dot, bytes]:
+        k, v = next(self._it)
+        _s, element, dot = decode_element_key(k)
+        return element, dot, v
 
 
 # ---------------------------------------------------------------- the vnode
@@ -379,6 +418,19 @@ class BigsetVnode:
         for k, v in self.store.seek(lo, hi):
             _s, element, dot = decode_element_key(k)
             yield element, dot, v
+
+    def element_cursor(
+        self,
+        set_name: bytes,
+        start: Optional[bytes] = None,
+        end: Optional[bytes] = None,
+        after: Optional[bytes] = None,
+    ) -> ElementCursor:
+        """Like :meth:`fold_raw`, but positional: the returned cursor can
+        :meth:`~ElementCursor.seek` to any element without paying for the
+        keys in between (the storage half of gallop joins and cursor
+        resumption)."""
+        return ElementCursor(self.store, set_name, start, end, after)
 
     def read(self, set_name: bytes, batch_size: int = 10_000) -> "ReadStream":
         """Streaming read (§4.4): batches of a partial ORSWOT, default 10k."""

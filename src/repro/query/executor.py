@@ -15,15 +15,25 @@ with three invariants:
   set-tombstone in one :class:`~repro.query.batch.BatchVisibility` dispatch
   (the Pallas ``dot_seen`` kernel) instead of per-dot Python probes.
 
-Joins zipper two ordered element streams; an ``intersect`` gallops — when
-one side is behind it first steps a few elements, then re-seeks the LSM
-iterator directly to the other side's element, which is how the
-lexicographic key layout turns a cross-set join into near-O(overlap) work.
+Joins come in two strategies, chosen per query by the cost-based planner
+(:mod:`repro.query.planner`) from LSM run statistics — or pinned via the
+plan's ``strategy`` field:
+
+* :func:`zipper_join` merges two ordered element streams end-to-end; when
+  one side falls behind it drains its already-read chunk, then repositions
+  the LSM cursor with one **positional seek** (skipped keys cost no IO).
+* :func:`gallop_join` streams only the smaller (drive) side and probes the
+  larger with bounded storage seeks — cost proportional to the small
+  side's cardinality, independent of the large side's.
+
+Both emit byte-identical entries; the chosen strategy is reported in
+:attr:`QueryStats.strategy` and flows through the serve layer's per-page
+stats.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Iterator, List, Optional, Tuple
+from typing import Callable, Iterator, List, Optional, Tuple
 
 import msgpack
 
@@ -36,10 +46,12 @@ from .cursor import decode_cursor, encode_cursor, resume_point
 from .plan import (Count, IndexLookup, IndexRange, Join, Membership, Plan,
                    PlanError, Range, Scan)
 from .plan import cursor_scope, index_span, validate
+from .planner import GALLOP, choose_join, side_stats
 
 DEFAULT_BATCH_SIZE = 1024
-# intersect: step this many elements before falling back to a storage seek
-GALLOP_STEP_LIMIT = 8
+# chunk size right after a positional seek: the next read should pay for a
+# probe-sized bite, not a full prefetch the gallop may immediately skip
+SEEK_CHUNK = 8
 
 
 @dataclass
@@ -51,8 +63,9 @@ class QueryStats:
     keys_scanned: int = 0
     elements_emitted: int = 0
     batches: int = 0
-    keys_probed: int = 0   # point probes issued (membership / index lookup),
-                           # counted on hits AND misses
+    keys_probed: int = 0   # point probes issued (membership / index lookup /
+                           # gallop probes), counted on hits AND misses
+    strategy: str = ""     # join strategy the planner executed ("" otherwise)
 
 
 @dataclass
@@ -75,9 +88,12 @@ class _EntryStream:
     """Visible (element, dots) stream over a bounded element range.
 
     Groups the raw element-key stream by element and filters each chunk's
-    dots through one batched visibility dispatch.  ``seek_past`` re-positions
-    the underlying LSM iterator (used by galloping intersects and cursor
-    resumption) without rebuilding the tombstone filter.
+    dots through one batched visibility dispatch.  The raw stream is a
+    positional :class:`~repro.core.bigset.ElementCursor`: ``seek_to``
+    (galloping joins, cursor resumption) repositions it with one O(log n)
+    storage seek — the skipped keys are never read, so they cost neither
+    ``bytes_read`` nor ``keys_scanned`` — without rebuilding the tombstone
+    filter.
     """
 
     def __init__(
@@ -95,9 +111,17 @@ class _EntryStream:
         self._set = set_name
         self._vis = vis
         self._stats = stats
-        self._end = end
         self._batch = batch_size
-        self._gen = self._generate(start=start, after=after)
+        # Grow chunks geometrically: a limit-25 page must not pre-pay for a
+        # full batch of keys (O(result), not O(batch)); deep scans still
+        # amortise into full-width visibility dispatches.
+        self._chunk = min(32, batch_size)
+        # last element the raw cursor has read into a chunk: the boundary
+        # between draining already-paid read-ahead and a storage seek
+        self._last_raw_el: Optional[bytes] = None
+        self._raw = vnode.element_cursor(
+            set_name, start=start, end=end, after=after)
+        self._gen = self._generate()
         self.head: Optional[Tuple[bytes, DotList]] = next(self._gen, None)
 
     def advance(self) -> Optional[Tuple[bytes, DotList]]:
@@ -109,37 +133,39 @@ class _EntryStream:
     def seek_to(self, element: bytes) -> None:
         """Position the head at the first visible entry >= ``element``.
 
-        Steps a few entries first (cheap when the gap is small), then
-        re-opens the LSM iterator with a storage seek.
+        When the target is still inside the chunk the raw cursor already
+        read (and metered), draining to it is free IO.  Past that
+        read-ahead, one positional storage seek jumps the gap — the
+        skipped keys are never read, so they cost no ``bytes_read`` and no
+        ``keys_scanned``, and nothing already paid for is re-read.  The
+        chunk size resets small after a seek so the next read pays for a
+        probe-sized bite, not a full prefetch.
         """
-        for _ in range(GALLOP_STEP_LIMIT):
-            if self.head is None or self.head[0] >= element:
-                return
-            self.advance()
-        if self.head is not None and self.head[0] < element:
-            self._gen = self._generate(start=element, after=None)
+        while self.head is not None and self.head[0] < element:
+            if self._last_raw_el is None or self._last_raw_el >= element:
+                self.advance()
+                continue
+            self._raw.seek(element)
+            self._chunk = SEEK_CHUNK
+            self._last_raw_el = None
+            self._gen = self._generate()
             self.head = next(self._gen, None)
+            return
 
-    def _generate(
-        self, start: Optional[bytes], after: Optional[bytes]
-    ) -> Iterator[Tuple[bytes, DotList]]:
-        raw = self._vnode.fold_raw(
-            self._set, start=start, end=self._end, after=after)
+    def _generate(self) -> Iterator[Tuple[bytes, DotList]]:
+        raw = self._raw
         cur_el: Optional[bytes] = None
         cur_dots: List[Dot] = []
-        # Grow chunks geometrically: a limit-25 page must not pre-pay for a
-        # full batch of keys (O(result), not O(batch)); deep scans still
-        # amortise into full-width visibility dispatches.
-        chunk_size = min(32, self._batch)
         while True:
             chunk: List[Tuple[bytes, Dot]] = []
             for el, dot, _v in raw:
                 chunk.append((el, dot))
-                if len(chunk) >= chunk_size:
+                self._last_raw_el = el
+                if len(chunk) >= self._chunk:
                     break
             if not chunk:
                 break
-            chunk_size = min(chunk_size * 4, self._batch)
+            self._chunk = min(self._chunk * 4, self._batch)
             dead = self._vis.seen_mask([d for _, d in chunk])
             self._stats.keys_scanned += len(chunk)
             self._stats.batches += 1
@@ -390,13 +416,59 @@ class QueryExecutor:
         res = QueryResult(
             clock=self.vnode.read_clock(plan.left).join(
                 self.vnode.read_clock(plan.right)))
-        left = self.entry_stream(
-            plan.left, start=start, after=after, stats=res.stats)
-        right = self.entry_stream(
-            plan.right, start=start, after=after, stats=res.stats)
-        collect_page(
-            zipper_join(plan.kind, left, right), plan.limit, scope, res)
+        choice = choose_join(
+            plan.kind,
+            side_stats(self.vnode.store, plan.left),
+            side_stats(self.vnode.store, plan.right),
+            forced=plan.strategy)
+        res.stats.strategy = choice.strategy
+        if choice.strategy == GALLOP:
+            drive_name, probe_name = (
+                (plan.left, plan.right) if choice.drive == "left"
+                else (plan.right, plan.left))
+            drive = self.entry_stream(
+                drive_name, start=start, after=after, stats=res.stats)
+            probe = self.element_probe(probe_name, res.stats)
+            entries = gallop_join(plan.kind, drive, probe, choice.drive)
+        else:
+            left = self.entry_stream(
+                plan.left, start=start, after=after, stats=res.stats)
+            right = self.entry_stream(
+                plan.right, start=start, after=after, stats=res.stats)
+            entries = zipper_join(plan.kind, left, right)
+        collect_page(entries, plan.limit, scope, res)
         return res
+
+    def element_probe(
+        self, set_name: bytes, stats: QueryStats
+    ) -> Callable[[bytes], Optional[DotList]]:
+        """Bounded point probe: one element's surviving dots, or None.
+
+        The gallop join's larger-side primitive — a storage seek spanning
+        exactly the element's keys (like Membership), visibility-filtered
+        through the same batched path as streams.  Counted in
+        ``keys_probed`` on hits AND misses; only the element's own keys
+        land in ``keys_scanned``, never the gap galloped over.
+        """
+        vis = BatchVisibility(
+            self.vnode.read_tombstone(set_name),
+            use_pallas=self.use_pallas, interpret=self.interpret)
+        vnode = self.vnode
+
+        def probe(element: bytes) -> Optional[DotList]:
+            stats.keys_probed += 1
+            dots = [
+                dot for _el, dot, _v in vnode.fold_raw(
+                    set_name, start=element, end=element + b"\x00")
+            ]
+            stats.keys_scanned += len(dots)
+            if not dots:
+                return None
+            dead = vis.seen_mask(dots)
+            live = tuple(d for d, is_dead in zip(dots, dead) if not is_dead)
+            return live or None
+
+        return probe
 
 
 def stream_entries(stream) -> Iterator[Tuple[bytes, DotList]]:
@@ -486,6 +558,40 @@ def collect_page(
                 res.cursor = encode_cursor(scope, el, inclusive=True)
             return
         res.entries.append((el, dots))
+
+
+def gallop_join(
+    kind: str, drive, probe, drive_side: str = "left"
+) -> Iterator[Tuple[bytes, DotList]]:
+    """Seek-gallop join: stream the small (drive) side, probe the large.
+
+    ``drive`` is a head/advance entry stream (vnode or quorum);
+    ``probe(element)`` resolves the larger side's surviving dots for
+    exactly that element via a bounded storage seek, or None.  Total cost
+    is O(drive + probes) — the large side's cardinality never appears.
+
+    Emitted dots follow the same single-domain rule as
+    :func:`zipper_join`: intersect yields the LEFT set's dots (the drive
+    entry's when driving left, the probe's when driving right);
+    difference emits left survivors, so it must always drive left.  Union
+    structurally cannot gallop (every entry of both sides is emitted) —
+    the planner maps it to the zipper before execution reaches here.
+    """
+    if kind == "intersect":
+        while drive.head is not None:
+            el, ddots = drive.advance()
+            pdots = probe(el)
+            if pdots is not None:
+                yield el, tuple(ddots if drive_side == "left" else pdots)
+    elif kind == "difference":
+        if drive_side != "left":
+            raise PlanError("gallop difference must drive the left side")
+        while drive.head is not None:
+            el, ddots = drive.advance()
+            if probe(el) is None:
+                yield el, tuple(ddots)
+    else:
+        raise PlanError(f"gallop join cannot execute kind {kind!r}")
 
 
 def zipper_join(

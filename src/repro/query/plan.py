@@ -35,6 +35,7 @@ import msgpack
 from ..index.postings import lookup_span
 
 JOIN_KINDS = ("intersect", "union", "difference")
+JOIN_STRATEGIES = ("zipper", "gallop")
 
 
 class PlanError(ValueError):
@@ -78,6 +79,14 @@ class Join:
     element is present there, otherwise the right set's — they are a causal
     context for that set only, never a blend of both (each set has its own
     clock, so equal dots name unrelated inserts across sets).
+
+    ``strategy`` pins the executor's algorithm (``"zipper"`` zippers both
+    ordered streams end-to-end; ``"gallop"`` drives the smaller side and
+    probes the larger with bounded storage seeks); ``None`` — the default —
+    lets the cost-based planner (:mod:`repro.query.planner`) choose from
+    LSM run statistics.  The strategy never changes the result, only its
+    cost, so it is deliberately **not** part of the cursor scope: a scan
+    may switch strategy between pages as statistics shift.
     """
 
     kind: str                       # intersect | union | difference
@@ -85,6 +94,7 @@ class Join:
     right: bytes                    # right set name
     limit: Optional[int] = None
     cursor: Optional[bytes] = None
+    strategy: Optional[str] = None  # zipper | gallop | None = planner picks
 
 
 @dataclass(frozen=True)
@@ -161,6 +171,10 @@ def validate(plan: Plan) -> Plan:
             raise PlanError("join needs two set names")
         if plan.limit is not None and plan.limit < 0:
             raise PlanError("join limit must be >= 0")
+        if plan.strategy is not None and plan.strategy not in JOIN_STRATEGIES:
+            raise PlanError(
+                f"unknown join strategy {plan.strategy!r} "
+                f"(expected one of {JOIN_STRATEGIES} or None)")
     elif isinstance(plan, IndexLookup):
         if not plan.set_name or not plan.index:
             raise PlanError("index lookup needs a set name and an index name")
@@ -256,6 +270,9 @@ def cursor_scope(plan: Plan) -> bytes:
     if isinstance(plan, Scan):
         return msgpack.packb(["scan", plan.set_name])
     if isinstance(plan, Join):
+        # strategy is deliberately not part of the scope: both strategies
+        # emit the same element sequence, so a cursor minted under one
+        # must resume under the other (the planner may flip mid-scan)
         return msgpack.packb(["join", plan.kind, plan.left, plan.right])
     if isinstance(plan, (IndexLookup, IndexRange)):
         start, end = index_span(plan)

@@ -440,7 +440,8 @@ class Page:
 
     entries: List[Tuple[bytes, DotList]]
     cursor: Optional[bytes]        # lease token; more pages exist iff not None
-    stats: dict                    # per-page QueryStats as plain ints
+    stats: dict                    # per-page QueryStats (ints, plus the join
+                                   # "strategy" the planner executed)
     present: Optional[bool] = None
     count: Optional[int] = None
     index_entries: Optional[List[Tuple[bytes, bytes, DotList]]] = None

@@ -11,10 +11,22 @@ Every operation is metered in :class:`IoStats` (bytes read / written /
 transferred), because the paper's central claim is about **bytes read and
 written over the life of the set** (§2.1: O(n) per op, O(n²) lifetime for
 riak-objects vs O(causal metadata) for bigset).
+
+Reads go through :class:`LsmIterator`, a *positional* merged cursor: it
+bisects every level to its start key, streams a heap merge, and can
+:meth:`~LsmIterator.seek` to a new position in O(log n) per level — the
+entries skipped by a seek are never touched, so they cost no ``bytes_read``.
+That positional seek is what lets the query layer's gallop joins skip IO
+instead of merely skipping Python iterations.  Each immutable run also
+carries statistics (key count, key-range fences, cumulative byte offsets);
+:meth:`LsmStore.range_stats` turns them into O(log n) cardinality/byte
+estimates for any key range — the input to cost-based join planning
+(:mod:`repro.query.planner`).
 """
 from __future__ import annotations
 
 import bisect
+import heapq
 import itertools
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
@@ -58,14 +70,47 @@ class IoMeter:
         return self._stats.delta(self._before)
 
 
-class _Run:
-    """Immutable sorted run of (key, value) pairs."""
+@dataclass(frozen=True)
+class RunStats:
+    """Statistics of one immutable run: cardinality, fences, volume."""
 
-    __slots__ = ("keys", "values")
+    key_count: int
+    min_key: bytes       # key-range fences: a range outside [min, max]
+    max_key: bytes       # cannot touch this run
+    total_bytes: int
+
+
+@dataclass(frozen=True)
+class RangeStats:
+    """Approximate cost of a key range: entry count and byte volume.
+
+    Counts are upper bounds — shadowed keys and storage tombstones are
+    included (deduplicating them would cost the scan the estimate exists
+    to avoid).  Good enough for *relative* cost decisions (join planning),
+    not for exact cardinality.
+    """
+
+    keys: int
+    bytes: int
+
+
+class _Run:
+    """Immutable sorted run of (key, value) pairs.
+
+    ``cum_bytes[i]`` is the byte volume of entries ``[0, i)`` — immutability
+    makes the prefix sums free to keep, and they turn any range's byte
+    estimate into two bisects and a subtraction.
+    """
+
+    __slots__ = ("keys", "values", "cum_bytes")
 
     def __init__(self, items: List[Tuple[bytes, bytes]]):
         self.keys = [k for k, _ in items]
         self.values = [v for _, v in items]
+        cum = [0]
+        for k, v in items:
+            cum.append(cum[-1] + len(k) + len(v))
+        self.cum_bytes = cum
 
     def get(self, key: bytes) -> Optional[bytes]:
         i = bisect.bisect_left(self.keys, key)
@@ -73,14 +118,96 @@ class _Run:
             return self.values[i]
         return None
 
-    def scan(self, lo: bytes, hi: bytes) -> Iterator[Tuple[bytes, bytes]]:
+    def span(self, lo: bytes, hi: Optional[bytes]) -> Tuple[int, int]:
+        """Index range [i, j) of keys in [lo, hi); hi=None is unbounded."""
         i = bisect.bisect_left(self.keys, lo)
-        while i < len(self.keys) and self.keys[i] < hi:
-            yield self.keys[i], self.values[i]
-            i += 1
+        j = len(self.keys) if hi is None else bisect.bisect_left(self.keys, hi)
+        return i, max(i, j)
+
+    def stats(self) -> RunStats:
+        return RunStats(
+            key_count=len(self.keys),
+            min_key=self.keys[0] if self.keys else b"",
+            max_key=self.keys[-1] if self.keys else b"",
+            total_bytes=self.cum_bytes[-1],
+        )
 
     def __len__(self) -> int:
         return len(self.keys)
+
+
+class LsmIterator:
+    """Positional merged cursor over a snapshot of the store.
+
+    Construction bisects every level (the sorted memtable view plus each
+    immutable run) to the first key >= ``lo`` and streams a heap merge in
+    key order — newest level wins per key, storage tombstones are dropped.
+    ``hi=None`` is genuinely unbounded: the cursor runs to the end of the
+    keyspace, whatever the keys look like.
+
+    :meth:`seek` repositions the cursor in O(log n) per level.  Entries
+    skipped over by a seek are **never touched**: no ``bytes_read`` is
+    metered for them (each ``seek`` counts one ``num_seeks``) — this is the
+    storage half of the query layer's gallop join.
+
+    The cursor snapshots its levels at construction: writes issued while it
+    is open are not visible through it (same semantics as the previous
+    per-scan memtable snapshot).
+    """
+
+    __slots__ = ("_store", "_hi", "_keys", "_vals", "_pos", "_heap", "_last")
+
+    def __init__(self, store: "LsmStore", lo: bytes = b"",
+                 hi: Optional[bytes] = None):
+        self._store = store
+        self._hi = hi
+        mem_keys, mem_vals = store._memtable_view()
+        self._keys: List[List[bytes]] = [mem_keys]
+        self._vals: List[List[bytes]] = [mem_vals]
+        for run in store.runs:  # newest first: lower index shadows higher
+            self._keys.append(run.keys)
+            self._vals.append(run.values)
+        self._pos = [0] * len(self._keys)
+        self._heap: List[Tuple[bytes, int, bytes]] = []
+        self._last: Optional[bytes] = None
+        self._position(lo)
+
+    def _push(self, idx: int) -> None:
+        i = self._pos[idx]
+        ks = self._keys[idx]
+        if i < len(ks):
+            k = ks[i]
+            if self._hi is None or k < self._hi:
+                heapq.heappush(self._heap, (k, idx, self._vals[idx][i]))
+                self._pos[idx] = i + 1
+
+    def _position(self, lo: bytes) -> None:
+        self._store.stats.num_seeks += 1
+        self._heap = []
+        for idx, ks in enumerate(self._keys):
+            self._pos[idx] = bisect.bisect_left(ks, lo)
+            self._push(idx)
+
+    def seek(self, lo: bytes) -> None:
+        """Reposition at the first live key >= ``lo`` (any direction)."""
+        self._last = None
+        self._position(lo)
+
+    def __iter__(self) -> "LsmIterator":
+        return self
+
+    def __next__(self) -> Tuple[bytes, bytes]:
+        while self._heap:
+            k, idx, v = heapq.heappop(self._heap)
+            self._push(idx)
+            if k == self._last:
+                continue  # older level shadowed
+            self._last = k
+            if v == TOMBSTONE:
+                continue
+            self._store.stats.bytes_read += len(k) + len(v)
+            return k, v
+        raise StopIteration
 
 
 class LsmStore:
@@ -97,6 +224,11 @@ class LsmStore:
         self.compaction_filter: Optional[Callable[[bytes, bytes], bool]] = None
         self.on_discard: Optional[Callable[[bytes, bytes], None]] = None
         self._compacting = False
+        # lazily-built sorted view of the memtable, invalidated by writes:
+        # cursor positioning is O(log memtable + page), not O(memtable sort)
+        # per scan call
+        self._mem_keys: Optional[List[bytes]] = None
+        self._mem_vals: Optional[List[bytes]] = None
 
     # ----------------------------------------------------------------- write
     def put_batch(self, items: List[Tuple[bytes, bytes]]) -> None:
@@ -105,6 +237,7 @@ class LsmStore:
             self.stats.bytes_written += len(k) + len(v)
             self.memtable[k] = v
         self.stats.num_writes += 1
+        self._mem_keys = self._mem_vals = None
         if len(self.memtable) >= self.memtable_limit:
             self.flush()
 
@@ -129,61 +262,72 @@ class LsmStore:
         self.stats.bytes_read += len(key) + len(v)
         return v
 
-    def scan(self, lo: bytes, hi: bytes) -> Iterator[Tuple[bytes, bytes]]:
-        """Merged iterator over [lo, hi); newest level wins per key."""
-        self.stats.num_seeks += 1
-        mem = sorted(
-            (k, v) for k, v in self.memtable.items() if lo <= k < hi
-        )
-        levels: List[Iterator[Tuple[bytes, bytes]]] = [iter(mem)]
-        levels += [run.scan(lo, hi) for run in self.runs]
-        yield from self._merge(levels)
+    def _memtable_view(self) -> Tuple[List[bytes], List[bytes]]:
+        """Sorted (keys, values) view of the memtable, cached until a write.
+
+        Keeping the view bisectable makes cursor positioning O(log n +
+        page) instead of O(memtable) per scan — read-heavy cursor paging
+        sorts once, not once per page.
+        """
+        if self._mem_keys is None:
+            items = sorted(self.memtable.items())
+            self._mem_keys = [k for k, _ in items]
+            self._mem_vals = [v for _, v in items]
+        return self._mem_keys, self._mem_vals
+
+    def scan(self, lo: bytes = b"", hi: Optional[bytes] = None) -> LsmIterator:
+        """Merged positional cursor over [lo, hi); newest level wins per
+        key.  ``hi=None`` scans to the end of the keyspace.  Use the
+        returned cursor's :meth:`LsmIterator.seek` to gallop without
+        paying for skipped keys."""
+        return LsmIterator(self, lo, hi)
 
     def seek(
         self, lo: bytes, hi: Optional[bytes] = None,
         limit: Optional[int] = None,
     ) -> Iterator[Tuple[bytes, bytes]]:
         """Bounded scan: position at ``lo`` and stream at most ``limit`` live
-        entries below ``hi``.
+        entries below ``hi``.  ``hi=None`` is genuinely unbounded — the
+        merged cursor has no upper fence, whatever the key bytes are.
 
         This is the primitive the query executor drives — a range query pays
         for the entries it returns (the iterator is lazy and metering happens
         per yielded entry), never for the whole keyspace.
         """
-        if hi is None:
-            hi = b"\xff" * 24  # past any encoded key (tags are 0x01/0x02)
-        it = self.scan(lo, hi)
+        it = LsmIterator(self, lo, hi)
         return itertools.islice(it, limit) if limit is not None else it
 
     def meter(self) -> IoMeter:
         """Open a per-query IO accounting window over this store's stats."""
         return IoMeter(self.stats)
 
-    def _merge(
-        self, levels: List[Iterator[Tuple[bytes, bytes]]]
-    ) -> Iterator[Tuple[bytes, bytes]]:
-        import heapq
+    # ------------------------------------------------------------ statistics
+    def run_stats(self) -> List[RunStats]:
+        """Per-run statistics, newest first: count, fences, byte volume."""
+        return [run.stats() for run in self.runs]
 
-        heap: List[Tuple[bytes, int, bytes]] = []
-        iters = levels
-        for idx, it in enumerate(iters):
-            for k, v in it:
-                heap.append((k, idx, v))
-                break
-        heapq.heapify(heap)
-        last_key: Optional[bytes] = None
-        while heap:
-            k, idx, v = heapq.heappop(heap)
-            nxt = next(iters[idx], None)
-            if nxt is not None:
-                heapq.heappush(heap, (nxt[0], idx, nxt[1]))
-            if k == last_key:
-                continue  # older level shadowed
-            last_key = k
-            if v == TOMBSTONE:
-                continue
-            self.stats.bytes_read += len(k) + len(v)
-            yield k, v
+    def range_stats(self, lo: bytes, hi: Optional[bytes] = None) -> RangeStats:
+        """Approximate keys/bytes in ``[lo, hi)`` across all levels.
+
+        O(log n) per run (bisect against the fences + cumulative byte
+        offsets) plus O(matching memtable entries); never touches values.
+        The count is an upper bound (shadowed keys and storage tombstones
+        included) — the planner's cost model only needs relative
+        magnitudes.  Callers with a tuple-key prefix get ``[lo, hi)`` from
+        :func:`repro.storage.keycodec.prefix_bounds`.
+        """
+        mem_keys, mem_vals = self._memtable_view()
+        i = bisect.bisect_left(mem_keys, lo)
+        j = len(mem_keys) if hi is None else bisect.bisect_left(mem_keys, hi)
+        j = max(i, j)
+        keys = j - i
+        nbytes = sum(
+            len(mem_keys[x]) + len(mem_vals[x]) for x in range(i, j))
+        for run in self.runs:
+            i, j = run.span(lo, hi)
+            keys += j - i
+            nbytes += run.cum_bytes[j] - run.cum_bytes[i]
+        return RangeStats(keys=keys, bytes=nbytes)
 
     # ------------------------------------------------------------ level mgmt
     def flush(self) -> None:
@@ -193,6 +337,7 @@ class LsmStore:
         self.stats.bytes_flushed += sum(len(k) + len(v) for k, v in items)
         self.runs.insert(0, _Run(items))
         self.memtable = {}
+        self._mem_keys = self._mem_vals = None
         if len(self.runs) >= self.auto_compact_runs and not self._compacting:
             self.compact()
 

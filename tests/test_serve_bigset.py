@@ -448,3 +448,40 @@ class TestServeIo:
         # o(n): every page far under the full fold, and absolutely page-sized
         assert worst_page * 20 < fold_bytes, (worst_page, fold_bytes)
         assert worst_page < 64 * 1024, worst_page
+
+
+class TestJoinStrategyOnTheWire:
+    def test_per_page_stats_surface_planner_choice(self):
+        """The planner's strategy rides the serve layer's per-page stats:
+        a skewed intersect reports gallop, a forced zipper reports zipper,
+        both return identical pages."""
+        cluster = BigsetCluster(3)
+        for i in range(400):
+            cluster.add(T, b"%05d" % i, coordinator=i % 3)
+        for i in range(0, 400, 40):
+            cluster.add(S, b"%05d" % i, coordinator=i % 3)
+        client = BigsetClient(BigsetService(cluster))
+        expected = [b"%05d" % i for i in range(0, 400, 40)]
+
+        auto = client.query(Join("intersect", S, T))
+        assert auto.stats["strategy"] == "gallop"
+        assert auto.members == expected
+        forced = client.query(Join("intersect", S, T, strategy="zipper"))
+        assert forced.stats["strategy"] == "zipper"
+        assert forced.entries == auto.entries
+        assert auto.stats["keys_scanned"] < forced.stats["keys_scanned"]
+        # non-join shapes report no strategy
+        assert client.query(Count(S)).stats["strategy"] == ""
+
+    def test_lease_cursor_resumes_across_strategies(self):
+        """A lease minted under one strategy resumes under another — the
+        cursor names a position, not an algorithm."""
+        cluster = BigsetCluster(3)
+        for el in ELEMS:
+            cluster.add(S, el, coordinator=0)
+            cluster.add(T, el, coordinator=0)
+        client = BigsetClient(BigsetService(cluster))
+        first = client.query(Join("union", S, T, limit=4, strategy="zipper"))
+        rest = client.query(Join("union", S, T, strategy="gallop"),
+                            cursor=first.cursor)
+        assert first.members + rest.members == sorted(ELEMS)

@@ -110,3 +110,123 @@ class TestLsm:
         s.put(b"abc", b"defgh")
         d = s.stats.delta(snap)
         assert d.bytes_written == 8 and d.num_writes == 1
+
+
+class TestPositionalSeek:
+    def _filled(self, n=600, memtable_limit=97):
+        """Keys spread across several runs plus a live memtable."""
+        s = LsmStore(memtable_limit=memtable_limit, auto_compact_runs=64)
+        for i in range(n):
+            s.put(b"k%05d" % i, b"v%05d" % i)
+        return s
+
+    def test_seek_unbounded_is_genuinely_unbounded(self):
+        """Regression: hi=None must not fabricate a 24-byte upper fence —
+        keys at or past ``b"\\xff" * 24`` were silently truncated."""
+        s = LsmStore(memtable_limit=4)
+        long_keys = [b"\xff" * 24, b"\xff" * 40, b"\xff" * 24 + b"tail"]
+        for k in long_keys:
+            s.put(k, b"v")
+        s.put(b"plain", b"v")
+        got = [k for k, _ in s.seek(b"")]
+        assert got == sorted(long_keys + [b"plain"])
+        # and from a lower bound inside the long-key cluster
+        assert [k for k, _ in s.seek(b"\xff" * 25)] == [b"\xff" * 40]
+
+    def test_seek_unbounded_long_element_keys(self):
+        """The same regression through the element keyspace: elements whose
+        encoded keys are far past 24 bytes stream in full."""
+        from repro.core.bigset import BigsetVnode
+
+        vn = BigsetVnode("a")
+        elems = [b"e" * 40, b"f" * 64, b"g" * 100]
+        for el in elems:
+            vn.coordinate_insert(b"longset", el)
+        assert [el for el, _d, _v in vn.fold_raw(b"longset")] == sorted(elems)
+
+    def test_positional_seek_skips_without_io(self):
+        """A cursor seek repositions in O(log n) and meters one seek, zero
+        bytes — skipped entries are never touched."""
+        s = self._filled()
+        it = s.scan(b"k00000")
+        assert next(it)[0] == b"k00000"
+        assert next(it)[0] == b"k00001"
+        snap = s.stats.snapshot()
+        it.seek(b"k00500")
+        d = s.stats.delta(snap)
+        assert d.bytes_read == 0 and d.num_seeks == 1
+        assert next(it)[0] == b"k00500"
+
+    def test_seek_respects_upper_bound_and_levels(self):
+        s = self._filled()
+        s.put(b"k00510", b"NEW")  # overwrite lands in the memtable level
+        it = s.scan(b"k00000", b"k00512")
+        it.seek(b"k00509")
+        assert list(it) == [(b"k00509", b"v00509"), (b"k00510", b"NEW"),
+                            (b"k00511", b"v00511")]
+
+    def test_cursor_snapshots_levels(self):
+        """Writes issued while a cursor is open are not visible through it
+        (the old per-scan memtable snapshot semantics)."""
+        s = LsmStore(memtable_limit=1000)
+        s.put(b"a", b"1")
+        it = s.scan(b"")
+        s.put(b"b", b"2")
+        assert [k for k, _ in it] == [b"a"]
+        assert [k for k, _ in s.scan(b"")] == [b"a", b"b"]
+
+    def test_memtable_view_cached_until_write(self):
+        """Satellite: scans reuse one bisectable sorted view — positioning
+        is O(log n + page), not an O(memtable) sort per cursor."""
+        s = LsmStore(memtable_limit=1000)
+        for i in range(50):
+            s.put(b"m%03d" % i, b"v")
+        list(s.scan(b"m010", b"m015"))
+        view1 = s._mem_keys
+        assert view1 is not None
+        list(s.scan(b"m020", b"m025"))
+        assert s._mem_keys is view1  # cached: no re-sort between reads
+        s.put(b"m999", b"v")
+        assert s._mem_keys is None   # write invalidates
+        assert [k for k, _ in s.scan(b"m998", None)] == [b"m999"]
+
+
+class TestRangeStats:
+    def test_single_run_exact(self):
+        s = LsmStore(memtable_limit=1000)
+        items = [(b"r%02d" % i, b"x" * i) for i in range(20)]
+        for k, v in items:
+            s.put(k, v)
+        s.flush()
+        rs = s.range_stats(b"r05", b"r15")
+        assert rs.keys == 10
+        assert rs.bytes == sum(len(k) + len(v) for k, v in items[5:15])
+        assert s.range_stats(b"r00").keys == 20          # hi=None unbounded
+        assert s.range_stats(b"zz").keys == 0
+
+    def test_memtable_and_runs_combine(self):
+        s = LsmStore(memtable_limit=8)
+        for i in range(20):          # flushes into runs + leaves a memtable
+            s.put(b"c%02d" % i, b"v")
+        rs = s.range_stats(b"c00", None)
+        assert rs.keys == 20 and rs.bytes == 20 * 4
+
+    def test_run_stats_fences(self):
+        s = LsmStore(memtable_limit=1000)
+        for i in range(10):
+            s.put(b"f%02d" % i, b"val")
+        s.flush()
+        (st0,) = s.run_stats()
+        assert st0.key_count == 10
+        assert st0.min_key == b"f00" and st0.max_key == b"f09"
+        assert st0.total_bytes == 10 * 6
+
+    def test_stats_never_meter_io(self):
+        s = LsmStore(memtable_limit=16)
+        for i in range(100):
+            s.put(b"s%03d" % i, b"v")
+        snap = s.stats.snapshot()
+        s.range_stats(b"", None)
+        s.run_stats()
+        d = s.stats.delta(snap)
+        assert d.bytes_read == 0 and d.num_seeks == 0

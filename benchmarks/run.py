@@ -14,13 +14,13 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: writes,reads,queries,joins,serve,mixed,"
-                         "ckpt,kernels,roofline")
+                    help="comma list: writes,reads,queries,joins,serve,"
+                         "antientropy,mixed,ckpt,kernels,roofline")
     args = ap.parse_args(argv)
 
-    from . import (bench_checkpoint, bench_joins, bench_kernels, bench_mixed,
-                   bench_queries, bench_reads, bench_serve, bench_writes,
-                   roofline)
+    from . import (bench_antientropy, bench_checkpoint, bench_joins,
+                   bench_kernels, bench_mixed, bench_queries, bench_reads,
+                   bench_serve, bench_writes, roofline)
 
     sections = {
         "writes": lambda: bench_writes.main(quick=args.quick),     # Tab1/Fig1-3
@@ -28,6 +28,8 @@ def main(argv=None) -> None:
         "queries": lambda: bench_queries.main(quick=args.quick),   # §4.4
         "joins": lambda: bench_joins.main(quick=args.quick),       # planner
         "serve": lambda: bench_serve.main(quick=args.quick),       # serve layer
+        "antientropy":
+            lambda: bench_antientropy.main(quick=args.quick),      # §6 / AE
         "mixed": lambda: bench_mixed.main(quick=args.quick),       # Fig6
         "ckpt": lambda: bench_checkpoint.main(quick=args.quick),   # framework
         "kernels": lambda: bench_kernels.main(quick=args.quick),

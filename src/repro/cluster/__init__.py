@@ -5,7 +5,16 @@ each datum, service many clients, act concurrently.  A deterministic,
 seedable network simulation delivers messages with optional drop /
 duplicate / reorder so convergence properties can be tested exhaustively.
 """
-from .sim import Network
+from .sim import DeliveryBudget, Network
+from .antientropy import AntiEntropyScheduler, AntiEntropyStats
 from .clusters import BigsetCluster, DeltaCluster, RiakSetCluster
 
-__all__ = ["Network", "BigsetCluster", "DeltaCluster", "RiakSetCluster"]
+__all__ = [
+    "AntiEntropyScheduler",
+    "AntiEntropyStats",
+    "BigsetCluster",
+    "DeliveryBudget",
+    "DeltaCluster",
+    "Network",
+    "RiakSetCluster",
+]

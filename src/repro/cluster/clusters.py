@@ -34,6 +34,9 @@ from ..query.executor import (QueryExecutor, QueryResult, QueryStats,
                               stream_entries, zipper_join)
 from ..query.planner import GALLOP, choose_join, quorum_side_stats
 from ..storage.lsm import LsmStore
+from .antientropy import (AntiEntropyScheduler, AntiEntropyStats,
+                          SyncRequest, apply_digest_reply,
+                          build_digest_reply, survivors_digest)
 from .sim import Message, Network
 
 
@@ -203,11 +206,14 @@ class BigsetCluster(_ClusterBase):
     """Decomposed bigset cluster (§4)."""
 
     def __init__(self, n_replicas: int = 3, net: Optional[Network] = None,
-                 sync: bool = True):
+                 sync: bool = True,
+                 scheduler: Optional[AntiEntropyScheduler] = None):
         super().__init__(n_replicas, net, sync)
         self.vnodes: Dict[str, BigsetVnode] = {
             a: BigsetVnode(a) for a in self.actors
         }
+        # read repair feeds this; tick() drains it (see antientropy module)
+        self.scheduler = scheduler or AntiEntropyScheduler(self.actors)
 
     def add(self, set_name: bytes, element: bytes, coordinator: int = 0,
             ctx: Iterable[Dot] = (), value: bytes = b"",
@@ -219,6 +225,7 @@ class BigsetCluster(_ClusterBase):
         or replacing add.
         """
         actor = self.actors[coordinator]
+        self.scheduler.note_set(set_name)
         delta = self.vnodes[actor].coordinate_insert(
             set_name, element, ctx, value=value)
         self._replicate(actor, delta, delta.size_bytes())
@@ -243,6 +250,7 @@ class BigsetCluster(_ClusterBase):
         the shipped delta, or None when there was nothing to remove."""
         actor = self.actors[coordinator]
         vn = self.vnodes[actor]
+        self.scheduler.note_set(set_name)
         if ctx is None:
             _, ctx = vn.is_member(set_name, element)
         ctx = tuple(ctx)
@@ -366,23 +374,33 @@ class BigsetCluster(_ClusterBase):
                 and not clocks[i].seen(dot)
             ]
             if not targets:
-                continue  # everyone already has it: the common case is free
+                # everyone already has it: the common case is free
+                self.scheduler.record_repair_miss(set_name)
+                continue
             donors = [
                 a for i, a in enumerate(actors)
                 if per_stream[i] is not None and dot in per_stream[i]
             ]
-            value = b""
+            value: Optional[bytes] = None
+            src = None
             for donor in donors:
                 v = self.vnodes[donor].store.get(
                     element_key(set_name, element, dot))
                 if v is not None:
-                    value = v
+                    value, src = v, donor
                     break
+            if value is None:
+                # no replica can supply the payload (the stream head
+                # outlived its key, or the donor raced a compaction):
+                # shipping a fabricated b"" would poison downstream index
+                # postings, so skip the dot and let scheduled anti-entropy
+                # replay it with its real value
+                self.scheduler.record_no_donor(set_name)
+                continue
             for a in targets:
                 delta = InsertDelta(set_name, element, dot, value=value)
-                self.net.send(
-                    donors[0] if donors else actors[0], a, delta,
-                    delta.size_bytes())
+                self.net.send(src, a, delta, delta.size_bytes())
+                self.scheduler.record_repair_hit(set_name, a, src)
                 sent = True
         if sent and self.sync:
             self.net.deliver_all(self._handle)
@@ -555,6 +573,66 @@ class BigsetCluster(_ClusterBase):
             return tuple(sorted(dots))
 
         return probe, clock
+
+    # -------------------------------------------------------- anti-entropy
+    def tick(self, budget: Optional[int] = None) -> int:
+        """Run one scheduler beat: pump scheduled sync rounds through the
+        network.
+
+        Each round is a bidirectional pull for one (set, replica pair) —
+        hottest repair-fed pairs first, then the round-robin baseline.
+        Every message (request, reply) rides ``self.net``, so drop/dup/
+        reorder semantics apply to anti-entropy exactly as to replication;
+        a lost reply simply leaves the pair divergent for a later tick.
+        Returns the number of rounds started.
+        """
+        rounds = self.scheduler.next_rounds(budget)
+        for set_name, a, b in rounds:
+            self._ae_pull(a, b, set_name)
+            self._ae_pull(b, a, set_name)
+            self.scheduler.stats.rounds += 1
+        if self.sync:
+            self.settle()
+        return len(rounds)
+
+    def _ae_pull(self, dst: str, src: str, set_name: bytes) -> None:
+        """``dst`` pulls ``set_name`` from ``src``: request and reply are
+        separate network messages (each can drop, duplicate, reorder).
+
+        The request snapshots ``dst``'s digest at send time; the reply is
+        built against ``src``'s state at *delivery* time — the same
+        at-least-once world replication lives in, which is why
+        ``apply_digest_reply`` is idempotent.
+        """
+        stats = self.scheduler.stats
+        vn = self.vnodes[dst]
+        req = SyncRequest(set_name, vn.read_clock(set_name),
+                          survivors_digest(vn, set_name))
+        stats.pulls += 1
+        stats.digest_bytes += req.size_bytes()
+
+        def handle_request(src_vn: BigsetVnode) -> None:
+            reply = build_digest_reply(
+                src_vn, req.set_name, req.clock, req.survivors)
+            stats.keys_scanned += reply.keys_scanned
+            stats.digest_bytes += reply.digest_bytes()
+            stats.payload_bytes += reply.payload_bytes()
+            if reply.skipped:
+                stats.rounds_skipped += 1
+            else:
+                stats.rounds_synced += 1
+                stats.keys_shipped += len(reply.missing)
+
+            def handle_reply(dst_vn: BigsetVnode) -> None:
+                apply_digest_reply(dst_vn, reply)
+
+            self.net.send(src, dst, handle_reply, reply.size_bytes())
+
+        self.net.send(dst, src, handle_request, req.size_bytes())
+
+    def ae_stats(self) -> AntiEntropyStats:
+        """Scheduled anti-entropy cost ledger (sits next to io_stats())."""
+        return self.scheduler.stats
 
     def compact_all(self) -> None:
         for vn in self.vnodes.values():

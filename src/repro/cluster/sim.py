@@ -13,6 +13,10 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 
+class DeliveryBudget(RuntimeError):
+    """``deliver_all`` ran out of ``max_steps`` with messages still queued."""
+
+
 @dataclass
 class Message:
     src: str
@@ -60,8 +64,17 @@ class Network:
         return True
 
     def deliver_all(self, handler: Callable[[Message], None], max_steps: int = 1_000_000) -> int:
+        """Deliver until the queue drains.  Raises :class:`DeliveryBudget`
+        if ``max_steps`` deliveries were not enough — callers treat
+        ``deliver_all`` as "everything arrived" (``settle()``, replication
+        fan-out), so silently returning with traffic still queued would
+        turn a budget overrun into invisible message loss."""
         n = 0
         while self.queue and n < max_steps:
             self.deliver_one(handler)
             n += 1
+        if self.queue:
+            raise DeliveryBudget(
+                f"deliver_all: {len(self.queue)} messages still queued "
+                f"after {max_steps} deliveries")
         return n

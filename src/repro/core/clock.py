@@ -155,10 +155,14 @@ class Clock:
     def subtract(self, dots: Iterable[Dot]) -> "Clock":
         """Remove ``dots`` from this clock (tombstone trimming, §4.3.3).
 
-        Only meaningful for the set-tombstone: after compaction discards an
-        element-key, its dot is subtracted so the tombstone stays minimal.
+        Only meaningful for clocks that describe *sets of dots* (the
+        set-tombstone, survivors digests): after compaction discards an
+        element-key, its dot is subtracted so the summary stays minimal.
         Subtracting a dot below the base fragments the base into cloud
-        entries for the retained counters.
+        entries for the retained counters — and the hole is permanent
+        (counters are never re-minted), so a digest over a set with holes
+        costs O(fragmentation) to store/compare, not O(actors).  ROADMAP
+        lists interval-compressed clouds as the structural fix.
         """
         by_actor: Dict[ActorId, set] = {}
         for d in dots:
@@ -208,6 +212,30 @@ class Clock:
         return self.descends(other) and self != other
 
     # ---------------------------------------------------------------- dots
+    def diff_dots(self, other: "Clock") -> Tuple[Dot, ...]:
+        """Dots seen by ``self`` but not by ``other`` — O(diff + metadata).
+
+        This is the digest subtraction at the heart of digest-driven
+        anti-entropy: two survivors digests (clock summaries of surviving
+        element-key dots) yield the exact diverged dot set without touching
+        a single element-key.  Contiguous shared prefixes are skipped
+        wholesale (base-vs-base is one comparison); cloud entries are
+        enumerated, so the cost is O(diff + cloud fragmentation) — see the
+        fragmentation note on :meth:`subtract`.
+        """
+        out = []
+        for a in set(self.base) | set(self.cloud):
+            lo = self.base.get(a, 0)
+            o_lo = other.base.get(a, 0)
+            o_cloud = other.cloud.get(a, frozenset())
+            for c in range(o_lo + 1, lo + 1):
+                if c not in o_cloud:
+                    out.append(Dot(a, c))
+            for c in self.cloud.get(a, frozenset()):
+                if c > o_lo and c not in o_cloud:
+                    out.append(Dot(a, c))
+        return tuple(sorted(out))
+
     def all_dots(self) -> Tuple[Dot, ...]:
         """Every dot this clock has seen (O(total events) — for tests/small clocks)."""
         out = []

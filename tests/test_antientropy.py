@@ -6,12 +6,16 @@ under message drop/duplication/reordering once AE runs, removals propagate
 even after the remover has *compacted* the removal away, and handoff moves
 a set wholesale to a fresh vnode.
 """
+import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.cluster.antientropy import handoff, survivors_digest, sync, trim_tombstone
+from repro.cluster.antientropy import (build_digest_reply, full_sync, handoff,
+                                       survivors_digest, sync, sync_pull,
+                                       trim_tombstone)
 from repro.cluster.clusters import BigsetCluster
-from repro.cluster.sim import Network
+from repro.cluster.sim import DeliveryBudget, Network
 from repro.core.bigset import BigsetVnode
+from repro.query.plan import Range
 
 S = b"s"
 ELEMS = [b"a1", b"b2", b"c3", b"d4"]
@@ -143,3 +147,173 @@ class TestTombstoneHygiene:
         dig = survivors_digest(vn, S)
         # 100 contiguous dots from one actor -> a single base VV entry
         assert dig.base == {"a": 100} and not dig.cloud
+
+
+class TestDigestSync:
+    """The digest ladder: skip-when-converged at O(causal metadata), fold
+    only diverged subranges otherwise, same convergence as the full fold."""
+
+    def _pair(self, n=400, bucket_limit=64):
+        a = BigsetVnode("a", digest_bucket_limit=bucket_limit)
+        b = BigsetVnode("b", digest_bucket_limit=bucket_limit)
+        for i in range(n):
+            b.replica_insert(a.coordinate_insert(S, b"e%05d" % i))
+        return a, b
+
+    def test_converged_round_zero_element_folds(self):
+        """Regression: a converged pair's sync round must not fold element
+        keys at all — digest bytes only (num_seeks counts every fold/scan
+        positioning, so zero seeks == zero folds)."""
+        a, b = self._pair()
+        sync(a, b, S)  # idempotent warm-up (already converged)
+        seeks = (a.store.stats.num_seeks, b.store.stats.num_seeks)
+        r1 = sync_pull(a, b, S)
+        r2 = sync_pull(b, a, S)
+        assert r1.skipped and r2.skipped
+        assert r1.keys_scanned == 0 == r2.keys_scanned
+        assert (a.store.stats.num_seeks, b.store.stats.num_seeks) == seeks
+
+    def test_diverged_sync_scans_only_diverged_subranges(self):
+        a, b = self._pair(n=2000, bucket_limit=64)
+        k = 20
+        for i in range(k):  # contiguous divergent writes at a only
+            a.coordinate_insert(S, b"zz%04d" % i)
+        reply = build_digest_reply(
+            a, S, b.read_clock(S), survivors_digest(b, S))
+        assert len(reply.missing) == k            # ships exactly O(k) keys
+        assert reply.keys_scanned < 2000 // 4     # not the whole set
+        sync(a, b, S)
+        assert a.value(S) == b.value(S)
+        assert sync_pull(b, a, S).skipped         # and now it's digest-only
+
+    def test_sync_converges_removals_without_resurrect(self):
+        a, b = self._pair(n=50)
+        _, ctx = a.is_member(S, b"e00007")
+        a.coordinate_remove(S, ctx)
+        a.compact()  # removal only visible via clock + absence
+        sync(a, b, S)
+        assert a.value(S) == b.value(S)
+        assert b"e00007" not in b.value(S)
+
+    @given(ops_st)
+    @settings(max_examples=25, deadline=None)
+    def test_digest_sync_equals_full_sync(self, ops):
+        def converge(sync_fn):
+            big = BigsetCluster(3, sync=False)
+            run_ops(big, ops)
+            big.net.queue.clear()
+            vns = list(big.vnodes.values())
+            for _ in range(2):
+                sync_fn(vns[0], vns[1], S)
+                sync_fn(vns[1], vns[2], S)
+                sync_fn(vns[2], vns[0], S)
+            return [vn.value(S) for vn in vns]
+        digest_vals = converge(sync)
+        full_vals = converge(full_sync)
+        assert digest_vals == full_vals
+        assert digest_vals[0] == digest_vals[1] == digest_vals[2]
+
+
+class TestScheduledAntiEntropy:
+    """tick() closes the loop: repair hits prioritise, baseline round-robin
+    converges everyone (including replicas no read quorum ever touches),
+    and every message rides the lossy simulated network."""
+
+    def test_non_quorum_replica_converges_via_ticks(self):
+        big = BigsetCluster(3, sync=False)
+        for e in ELEMS:
+            big.add(S, e)
+        big.remove(S, ELEMS[0])
+        big.net.queue.clear()          # replicas 1, 2 never saw replication
+        big.query(Range(S, None, None), r=2)   # read repair heals the quorum
+        big.settle()
+        assert big.ae_stats().repair_hits > 0
+        assert big.vnodes["vnode2"].value(S) == frozenset()  # outside quorum
+        for _ in range(4):
+            big.tick()
+            big.settle()
+        expect = set(ELEMS[1:])
+        assert all(vn.value(S) == expect for vn in big.vnodes.values())
+        assert big.ae_stats().keys_shipped >= len(expect)
+
+    def test_repair_hits_feed_and_decay(self):
+        big = BigsetCluster(3, sync=False)
+        big.add(S, b"x")
+        big.net.queue.clear()
+        big.query(Range(S, None, None), r=2)
+        big.settle()
+        hot = big.scheduler.hot_pairs()
+        assert hot and hot[0][0] == S and hot[0][1] == ("vnode0", "vnode1")
+        assert big.scheduler.next_rounds(budget=1) == [(S, "vnode0", "vnode1")]
+        for _ in range(8):  # quiescent: no new hits, scores cool off
+            big.scheduler.next_rounds(budget=0)
+        assert not big.scheduler.hot_pairs()
+
+    def test_converged_cluster_ticks_are_digest_only(self):
+        big = BigsetCluster(3)
+        for e in ELEMS:
+            big.add(S, e)
+        big.tick()  # joins any straggling clock state
+        before = [big.vnodes[a].store.stats.num_seeks for a in big.actors]
+        big.tick(budget=3)
+        s = big.ae_stats()
+        assert s.rounds_skipped > 0
+        assert [big.vnodes[a].store.stats.num_seeks
+                for a in big.actors] == before
+        assert s.keys_scanned == 0
+
+    @given(ops_st, st.integers(0, 2**32 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_ticks_converge_under_drop_dup_reorder(self, ops, seed):
+        net = Network(seed=seed, drop_prob=0.25, dup_prob=0.25, reorder=True)
+        big = BigsetCluster(3, net=net, sync=False)
+        run_ops(big, ops)
+        big.settle()  # deliver what survived (reordered, duplicated)
+        for _ in range(14):
+            big.tick(budget=3)
+            big.settle()
+        vns = list(big.vnodes.values())
+        assert vns[0].value(S) == vns[1].value(S) == vns[2].value(S)
+
+
+class TestSyncPathBugfixes:
+    def test_deliver_all_raises_on_budget_with_leftovers(self):
+        """Silently returning with queued traffic made settle() lie."""
+        net = Network()
+        for i in range(5):
+            net.send("a", "b", i)
+        with pytest.raises(DeliveryBudget):
+            net.deliver_all(lambda m: None, max_steps=3)
+        assert net.pending() == 2  # leftovers stay queued, not dropped
+
+    def test_repair_skips_dot_without_donor_payload(self):
+        """A repair that cannot source the value must skip the dot (and
+        count it) rather than fabricate an empty payload that downstream
+        replica_insert would index."""
+        from repro.core.bigset import element_key
+
+        big = BigsetCluster(3, sync=False)
+        d = big.add(S, b"x", value=b"payload")
+        big.net.queue.clear()
+        # sabotage: the donor's key vanishes between stream and repair
+        big.vnodes["vnode0"].store.delete(element_key(S, b"x", d.dot))
+        clocks = [big.vnodes[a].read_clock(S) for a in big.actors]
+        per_stream = [frozenset([d.dot]), None, None]
+        big._repair(S, b"x", [d.dot], per_stream, clocks, big.actors)
+        assert big.net.pending() == 0          # nothing fabricated
+        assert big.ae_stats().repair_no_donor == 1
+
+    def test_apply_reply_skips_trim_when_tombstone_unchanged(self):
+        a, b = BigsetVnode("a"), BigsetVnode("b")
+        b.replica_insert(a.coordinate_insert(S, b"x"))
+        calls = []
+        orig_put = b.store.put
+
+        def counting_put(key, value):
+            calls.append(key)
+            return orig_put(key, value)
+
+        b.store.put = counting_put
+        full_sync(a, b, S)  # converged full sync: tombstones untouched
+        # trim_tombstone writes via store.put; no trim means no put calls
+        assert calls == []

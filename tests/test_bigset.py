@@ -194,3 +194,123 @@ class TestConcurrencySemantics:
         b.replica_remove(RemoveDelta(S, (delta.dot,)))
         b.replica_insert(delta)  # late add arrives
         assert b.value(S) == set()
+
+
+class TestSetDigest:
+    """The maintained per-set digest must track the fold-based truth exactly
+    — anti-entropy's skip decision and subrange location both hang off it."""
+
+    def _apply(self, big, ops):
+        for kind, coord, elem in ops:
+            if kind == "add":
+                big.add(S, elem, coord)
+            else:
+                big.remove(S, elem, coord)
+
+    @given(ops_st)
+    @settings(max_examples=30, deadline=None)
+    def test_survivors_digest_matches_fold(self, ops):
+        from repro.core.clock import Clock
+
+        big = BigsetCluster(3)
+        self._apply(big, ops)
+        for compacted in (False, True):
+            if compacted:
+                big.compact_all()
+            for vn in big.vnodes.values():
+                fold = Clock.zero().add_dots(d for _e, d in vn.fold(S))
+                assert vn.survivors_digest(S) == fold, compacted
+
+    def test_adoption_of_prepopulated_store(self):
+        """A vnode handed an already-written store folds once to adopt, then
+        its digest is exact — and that fold is background volume, not
+        foreground read IO."""
+        from repro.core.clock import Clock
+
+        vn = BigsetVnode("a")
+        for i in range(50):
+            vn.coordinate_insert(S, b"e%03d" % i)
+        _, ctx = vn.is_member(S, b"e000")
+        vn.coordinate_remove(S, ctx)
+        truth = Clock.zero().add_dots(d for _e, d in vn.fold(S))
+
+        adopted = BigsetVnode("z", vn.store)
+        before = adopted.store.stats.snapshot()
+        assert adopted.survivors_digest(S) == truth
+        delta = adopted.store.stats.delta(before)
+        assert delta.num_seeks == 0
+        assert delta.bytes_compacted > 0  # adoption billed as background
+
+    def test_bucket_splits_bound_location(self):
+        vn = BigsetVnode("a", digest_bucket_limit=32)
+        for i in range(512):
+            vn.coordinate_insert(S, b"%05d" % i)
+        dig = vn._digest(S)
+        assert len(dig.buckets) > 4  # fences actually formed
+        assert dig.key_count() == 512
+        # locating one dot names one narrow fenced subrange, not the set
+        ranges = vn.digest_ranges(S, [Dot("a", 500)])
+        assert len(ranges) == 1
+        lo, hi = ranges[0]
+        n_in = sum(1 for _ in vn.fold_raw(S, start=lo, end=hi))
+        assert n_in <= 64
+
+    def test_adoption_counts_exact_despite_midstream_splits(self):
+        """Adopting a store bigger than one bucket triggers splits whose
+        disk folds already place not-yet-adopted keys; re-adding them must
+        be idempotent (dot sets AND counts)."""
+        vn = BigsetVnode("a")
+        for i in range(1000):
+            vn.coordinate_insert(S, b"k%04d" % i)
+        from repro.core.clock import Clock
+
+        adopted = BigsetVnode("z", vn.store, digest_bucket_limit=64)
+        dig = adopted._digest(S)
+        assert dig.key_count() == 1000
+        assert sum(dig.counts) == 1000
+        # and the *total* digest lost nothing to the fold/adoption race —
+        # a dropped dot here would make digest sync tombstone live keys
+        truth = Clock.zero().add_dots(d for _e, d in vn.fold(S))
+        assert adopted.survivors_digest(S) == truth
+
+    def test_unsplittable_bucket_backs_off(self):
+        """A bucket whose keys all share one element cannot split; its
+        threshold must back off instead of re-folding on every write."""
+        vn = BigsetVnode("a", digest_bucket_limit=8)
+        for _ in range(9):  # overflow: split attempt fails, limit doubles
+            _, ctx = vn.is_member(S, b"hot")
+            vn.coordinate_insert(S, b"hot", ctx=ctx)
+        dig = vn._digest(S)
+        assert len(dig.buckets) == 1 and dig.limits[0] > 8
+        before = vn.store.stats.bytes_compacted
+        for _ in range(6):  # under the raised limit: no fold per write
+            _, ctx = vn.is_member(S, b"hot")
+            vn.coordinate_insert(S, b"hot", ctx=ctx)
+        assert vn.store.stats.bytes_compacted == before
+
+    def test_survivors_digest_cached_between_state_changes(self):
+        vn = BigsetVnode("a")
+        vn.coordinate_insert(S, b"x")
+        vn.coordinate_insert(S, b"y")
+        _, ctx = vn.is_member(S, b"x")
+        vn.coordinate_remove(S, ctx)  # non-zero tombstone: cacheable path
+        first = vn.survivors_digest(S)
+        assert vn.survivors_digest(S) is first  # no re-enumeration
+        vn.coordinate_insert(S, b"z")           # state change invalidates
+        assert vn.survivors_digest(S) is not first
+
+    def test_compact_drops_unbacked_tombstone_dots(self):
+        """A remove redelivered after compaction re-tombstones a dot whose
+        key is long gone; the next compaction must shed it (sync's trim is
+        skipped when a reply leaves the tombstone unchanged, so compaction
+        is the guaranteed hygiene point)."""
+        vn = BigsetVnode("a")
+        vn.coordinate_insert(S, b"x")
+        _, ctx = vn.is_member(S, b"x")
+        delta = vn.coordinate_remove(S, ctx)
+        vn.compact()                      # key discarded, tombstone zeroed
+        assert vn.read_tombstone(S).is_zero()
+        vn.replica_remove(delta)          # dup delivery: unbacked dot returns
+        assert not vn.read_tombstone(S).is_zero()
+        vn.compact()
+        assert vn.read_tombstone(S).is_zero()

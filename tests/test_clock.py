@@ -116,3 +116,22 @@ class TestDotsEnumeration:
     def test_obj_roundtrip(self, dots):
         c = clock_of(dots)
         assert Clock.from_obj(c.to_obj()) == c
+
+
+class TestDiffDots:
+    """diff_dots is digest subtraction — the anti-entropy divergence probe."""
+
+    @given(clock_st, clock_st)
+    @settings(max_examples=60, deadline=None)
+    def test_diff_equals_set_difference(self, x, y):
+        assert set(x.diff_dots(y)) == set(x.all_dots()) - set(y.all_dots())
+
+    @given(clock_st)
+    @settings(max_examples=30, deadline=None)
+    def test_diff_with_self_is_empty(self, x):
+        assert x.diff_dots(x) == ()
+
+    @given(clock_st, clock_st)
+    @settings(max_examples=30, deadline=None)
+    def test_diff_against_join_is_empty(self, x, y):
+        assert x.diff_dots(x.join(y)) == ()

@@ -16,6 +16,8 @@ from typing import List
 import numpy as np
 
 from repro.cluster.clusters import BigsetCluster
+from repro.kernels.dot_seen.ops import DISPATCHES
+from repro.obs.trace import Tracer
 from repro.query.plan import Membership, Scan
 from repro.serve.bigset_service import (Backpressure, BigsetClient,
                                         BigsetService, ServiceConfig)
@@ -58,28 +60,40 @@ def bench_scan(client: BigsetClient, card: int):
     return dt / pages * 1e6, page_bytes // pages
 
 
-def bench_saturation(cluster: BigsetCluster, card: int):
+def bench_saturation(cluster: BigsetCluster, card: int,
+                     tracer: Tracer | None = None):
     """Scan through a budget sized to a couple of pages; a fake clock makes
-    the backoff free, so the row isolates admission-control overhead."""
+    the backoff free, so the row isolates admission-control overhead.  Also
+    reports amortized dot_seen launches per page (the micro-batcher
+    baseline) from the process-wide :data:`DISPATCHES` ledger."""
     clk = [0.0]
     service = BigsetService(
         cluster,
         ServiceConfig(byte_budget=2 * PAGE * 64, budget_window=1.0,
                       lease_ttl=1e9),
-        clock=lambda: clk[0])
+        clock=lambda: clk[0],
+        tracer=tracer)
     client = BigsetClient(service)
 
     def advance(seconds: float) -> None:
         clk[0] += seconds + 1e-3
 
+    saved_tracer = cluster.tracer
+    if tracer is not None:  # trace the cluster path too, not just serve
+        cluster.tracer = tracer
     seen = pages = 0
+    before = DISPATCHES.snapshot()
     t0 = time.perf_counter()
-    for page in client.pages(Scan(SET, page_size=PAGE), sleep=advance):
-        pages += 1
-        seen += len(page.entries)
+    try:
+        for page in client.pages(Scan(SET, page_size=PAGE), sleep=advance):
+            pages += 1
+            seen += len(page.entries)
+    finally:
+        cluster.tracer = saved_tracer
     dt = time.perf_counter() - t0
+    launches = DISPATCHES.delta(before).launches
     assert seen == card, (seen, card)  # rejection never loses a cursor
-    return dt / pages * 1e6, service.rejections
+    return dt / pages * 1e6, service.rejections, launches / pages
 
 
 def main(cards=(1000, 5000), n_ops=100, quick=False) -> List[str]:
@@ -96,10 +110,20 @@ def main(cards=(1000, 5000), n_ops=100, quick=False) -> List[str]:
         rows.append(
             f"serve/scan_page/{card},{page_us:.1f},"
             f"bytes_per_page={bytes_per_page}")
-        sat_us, rejected = bench_saturation(cluster, card)
+        sat_us, rejected, launches_pp = bench_saturation(cluster, card)
         rows.append(
             f"serve/saturation/{card},{sat_us:.1f},"
-            f"rejected={rejected};resumed=all")
+            f"rejected={rejected};resumed=all;"
+            f"launches_per_query={launches_pp:.2f}")
+        # Same workload with tracing on: the derived overhead_pct is the
+        # acceptance check that instrumentation costs < 5% when enabled
+        # (and exactly nothing when disabled — that's this very row above,
+        # which runs through the NULL_TRACER fast path).
+        traced_us, _, _ = bench_saturation(cluster, card, tracer=Tracer())
+        overhead = (traced_us - sat_us) / sat_us * 100.0
+        rows.append(
+            f"serve/saturation_traced/{card},{traced_us:.1f},"
+            f"overhead_pct={overhead:.1f}")
     return rows
 
 

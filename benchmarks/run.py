@@ -2,10 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` shrinks sizes
 (used by the test suite); full mode is the reported configuration.
+``--metrics-out PATH`` additionally writes a JSON snapshot of the obs
+metrics registry (section wall times, kernel-dispatch ledger) plus every
+CSV row — the machine-readable sibling of the printed table, uploaded as
+a CI artifact by the quick-bench job.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -16,6 +21,8 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: writes,reads,queries,joins,serve,"
                          "antientropy,mixed,ckpt,kernels,roofline")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a JSON metrics snapshot + rows to PATH")
     args = ap.parse_args(argv)
 
     from . import (bench_antientropy, bench_checkpoint, bench_joins,
@@ -37,6 +44,10 @@ def main(argv=None) -> None:
     }
     only = set(args.only.split(",")) if args.only else set(sections)
 
+    from repro.obs.metrics import MetricsRegistry, lift_dispatch_stats
+
+    registry = MetricsRegistry()
+    collected = []
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         if name not in only:
@@ -45,11 +56,20 @@ def main(argv=None) -> None:
         try:
             for row in fn():
                 print(row)
+                collected.append(row)
         except Exception as e:  # keep the harness running
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
             raise
-        print(f"# section {name} took {time.perf_counter() - t0:.1f}s",
-              file=sys.stderr)
+        elapsed = time.perf_counter() - t0
+        registry.gauge(f"bench.section_seconds.{name}").set(elapsed)
+        print(f"# section {name} took {elapsed:.1f}s", file=sys.stderr)
+
+    if args.metrics_out:
+        lift_dispatch_stats(registry)  # process-wide kernel-launch ledger
+        with open(args.metrics_out, "w") as fh:
+            json.dump({"metrics": registry.snapshot(), "rows": collected},
+                      fh, indent=1)
+        print(f"# metrics snapshot -> {args.metrics_out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

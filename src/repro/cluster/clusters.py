@@ -17,7 +17,8 @@ makes.
 from __future__ import annotations
 
 import msgpack
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from ..core.bigset import BigsetVnode, InsertDelta, RemoveDelta
 from ..core.clock import Clock
@@ -26,6 +27,7 @@ from ..core.dots import Dot
 from ..core.orswot import Orswot
 from ..core.streaming import merge_entry, quorum_is_member, quorum_read
 from ..index.spec import IndexSpec
+from ..obs.trace import NULL_TRACER, TraceContext, Tracer
 from ..query import cursor as query_cursor
 from ..query import plan as query_plan
 from ..query.executor import (QueryExecutor, QueryResult, QueryStats,
@@ -57,6 +59,24 @@ class ClusterSession:
 
     def observe_mutation(self, delta) -> None:
         pass
+
+
+# ------------------------------------------------------------ traced payloads
+@dataclass(frozen=True)
+class TracedPayload:
+    """A network payload carrying its sender's :class:`TraceContext`.
+
+    Only minted when tracing is **enabled** — disabled clusters ship the
+    raw payload object, byte-identical to untraced operation (asserted in
+    ``tests/test_obs.py``).  The context names a span that was finished
+    *before* the message entered the network, so however delivery goes
+    (dropped, duplicated, reordered), a delivered message's ``net.deliver``
+    span always parents under a span that exists: drops lose leaves,
+    never tree integrity.
+    """
+
+    ctx: TraceContext
+    payload: Any
 
 
 # --------------------------------------------------------------- orswot codec
@@ -207,13 +227,23 @@ class BigsetCluster(_ClusterBase):
 
     def __init__(self, n_replicas: int = 3, net: Optional[Network] = None,
                  sync: bool = True,
-                 scheduler: Optional[AntiEntropyScheduler] = None):
+                 scheduler: Optional[AntiEntropyScheduler] = None,
+                 tracer: Optional[Tracer] = None):
         super().__init__(n_replicas, net, sync)
         self.vnodes: Dict[str, BigsetVnode] = {
             a: BigsetVnode(a) for a in self.actors
         }
         # read repair feeds this; tick() drains it (see antientropy module)
         self.scheduler = scheduler or AntiEntropyScheduler(self.actors)
+        # observability: NULL_TRACER by default — disabled tracing wraps no
+        # payloads and records no spans (zero behavior change, invariant 10)
+        self.tracer = tracer or NULL_TRACER
+
+    def _traced(self, ctx_span, payload):
+        """Wrap a payload with the span's context iff tracing is enabled."""
+        if not self.tracer.enabled:
+            return payload
+        return TracedPayload(ctx_span.context(), payload)
 
     def add(self, set_name: bytes, element: bytes, coordinator: int = 0,
             ctx: Iterable[Dot] = (), value: bytes = b"",
@@ -226,9 +256,12 @@ class BigsetCluster(_ClusterBase):
         """
         actor = self.actors[coordinator]
         self.scheduler.note_set(set_name)
-        delta = self.vnodes[actor].coordinate_insert(
-            set_name, element, ctx, value=value)
-        self._replicate(actor, delta, delta.size_bytes())
+        with self.tracer.span("cluster.insert", set_name=set_name,
+                              actor=actor) as sp:
+            delta = self.vnodes[actor].coordinate_insert(
+                set_name, element, ctx, value=value)
+            self._replicate(actor, self._traced(sp, delta),
+                            delta.size_bytes())
         if session is not None:
             session.observe_mutation(delta)
         return delta
@@ -256,8 +289,11 @@ class BigsetCluster(_ClusterBase):
         ctx = tuple(ctx)
         if not ctx:
             return None
-        delta = vn.coordinate_remove(set_name, ctx)
-        self._replicate(actor, delta, delta.size_bytes())
+        with self.tracer.span("cluster.remove", set_name=set_name,
+                              actor=actor) as sp:
+            delta = vn.coordinate_remove(set_name, ctx)
+            self._replicate(actor, self._traced(sp, delta),
+                            delta.size_bytes())
         if session is not None:
             session.observe_mutation(delta)
         return delta
@@ -288,13 +324,26 @@ class BigsetCluster(_ClusterBase):
         return out
 
     def _handle(self, msg: Message) -> None:
-        vn = self.vnodes[msg.dst]
-        if isinstance(msg.payload, InsertDelta):
-            vn.replica_insert(msg.payload)
-        elif isinstance(msg.payload, RemoveDelta):
-            vn.replica_remove(msg.payload)
+        payload = msg.payload
+        if isinstance(payload, TracedPayload):
+            # the delivery span parents on the *sender's* span via the
+            # carried context — correct under drop/dup/reorder, where the
+            # call stack at delivery time says nothing about causality
+            with self.tracer.span("net.deliver", parent=payload.ctx,
+                                  src=msg.src, dst=msg.dst,
+                                  size_bytes=msg.size_bytes):
+                self._deliver(msg.dst, payload.payload)
+        else:
+            self._deliver(msg.dst, payload)
+
+    def _deliver(self, dst: str, payload) -> None:
+        vn = self.vnodes[dst]
+        if isinstance(payload, InsertDelta):
+            vn.replica_insert(payload)
+        elif isinstance(payload, RemoveDelta):
+            vn.replica_remove(payload)
         else:  # anti-entropy and membership traffic uses callables
-            msg.payload(vn)
+            payload(vn)
 
     def read(self, set_name: bytes, r: int = 1) -> Orswot:
         streams = []
@@ -325,30 +374,57 @@ class BigsetCluster(_ClusterBase):
         if r is None:
             r = self.n // 2 + 1
         actors = self.actors[:r]
-        meters = [self.vnodes[a].store.meter() for a in actors]
-        if isinstance(plan, query_plan.Membership):
-            res = self._q_membership(plan, actors, repair)
-        elif isinstance(plan, query_plan.Range):
-            res = self._q_range(
-                plan.set_name, plan.start, plan.end, plan.limit,
-                plan.cursor, query_plan.cursor_scope(plan), actors, repair)
-        elif isinstance(plan, query_plan.Scan):
-            res = self._q_range(
-                plan.set_name, None, None, plan.page_size,
-                plan.cursor, query_plan.cursor_scope(plan), actors, repair)
-        elif isinstance(plan, query_plan.Count):
-            res = self._q_count(plan, actors, repair)
-        elif isinstance(plan, query_plan.Join):
-            res = self._q_join(plan, actors, repair)
-        elif isinstance(plan, (query_plan.IndexLookup, query_plan.IndexRange)):
-            res = self._q_index(plan, actors, repair)
-        else:  # pragma: no cover - validate() rejects
-            raise query_plan.PlanError(type(plan).__name__)
-        for m in meters:
-            io = m.delta()
-            res.stats.bytes_read += io.bytes_read
-            res.stats.num_seeks += io.num_seeks
-        account_emitted(res)
+        tr = self.tracer
+        with tr.span("cluster.query", plan=type(plan).__name__,
+                     set_name=getattr(plan, "set_name", b""), r=r) as qspan:
+            meters = [self.vnodes[a].store.meter() for a in actors]
+            # coverage sub-spans opened per quorum replica BEFORE execution
+            # (their storage children get the replica's IoStats delta after)
+            rspans = ([tr.start("replica.coverage", parent=qspan.context(),
+                                actor=a) for a in actors]
+                      if tr.enabled else None)
+            if isinstance(plan, query_plan.Membership):
+                res = self._q_membership(plan, actors, repair)
+            elif isinstance(plan, query_plan.Range):
+                res = self._q_range(
+                    plan.set_name, plan.start, plan.end, plan.limit,
+                    plan.cursor, query_plan.cursor_scope(plan), actors,
+                    repair)
+            elif isinstance(plan, query_plan.Scan):
+                res = self._q_range(
+                    plan.set_name, None, None, plan.page_size,
+                    plan.cursor, query_plan.cursor_scope(plan), actors,
+                    repair)
+            elif isinstance(plan, query_plan.Count):
+                res = self._q_count(plan, actors, repair)
+            elif isinstance(plan, query_plan.Join):
+                res = self._q_join(plan, actors, repair)
+            elif isinstance(plan,
+                            (query_plan.IndexLookup, query_plan.IndexRange)):
+                res = self._q_index(plan, actors, repair)
+            else:  # pragma: no cover - validate() rejects
+                raise query_plan.PlanError(type(plan).__name__)
+            for i, m in enumerate(meters):
+                io = m.delta()
+                res.stats.bytes_read += io.bytes_read
+                res.stats.num_seeks += io.num_seeks
+                if rspans is not None:
+                    rspan = rspans[i]
+                    tr.finish(tr.start(
+                        "storage.scan", parent=rspan.context(),
+                        bytes_read=io.bytes_read, num_seeks=io.num_seeks))
+                    tr.finish(rspan.set(bytes_read=io.bytes_read,
+                                        num_seeks=io.num_seeks))
+            account_emitted(res)
+            if tr.enabled:
+                # one summary span for the query's batched-visibility work:
+                # the per-query half of the kernel-launch baseline
+                tr.finish(tr.start(
+                    "kernel.dot_seen", parent=qspan.context(),
+                    launches=res.stats.kernel_launches,
+                    rows=res.stats.kernel_rows))
+                qspan.set(elements=res.stats.elements_emitted,
+                          bytes_read=res.stats.bytes_read)
         if session is not None:
             session.observe_query(plan, res)
         return res
@@ -366,7 +442,10 @@ class BigsetCluster(_ClusterBase):
         """
         from ..core.bigset import element_key
 
+        tr = self.tracer
+        rspan = None  # opened lazily: only an actual replay deserves a span
         sent = False
+        replayed = 0
         for dot in dots:
             targets = [
                 a for i, a in enumerate(actors)
@@ -397,11 +476,19 @@ class BigsetCluster(_ClusterBase):
                 # replay it with its real value
                 self.scheduler.record_no_donor(set_name)
                 continue
+            if rspan is None and tr.enabled:
+                rspan = tr.start("query.read_repair", set_name=set_name,
+                                 element=element)
             for a in targets:
                 delta = InsertDelta(set_name, element, dot, value=value)
-                self.net.send(src, a, delta, delta.size_bytes())
+                payload = (TracedPayload(rspan.context(), delta)
+                           if rspan is not None else delta)
+                self.net.send(src, a, payload, delta.size_bytes())
                 self.scheduler.record_repair_hit(set_name, a, src)
                 sent = True
+                replayed += 1
+        if rspan is not None:
+            tr.finish(rspan.set(replayed=replayed))
         if sent and self.sync:
             self.net.deliver_all(self._handle)
 
@@ -587,9 +674,11 @@ class BigsetCluster(_ClusterBase):
         Returns the number of rounds started.
         """
         rounds = self.scheduler.next_rounds(budget)
+        tr = self.tracer
         for set_name, a, b in rounds:
-            self._ae_pull(a, b, set_name)
-            self._ae_pull(b, a, set_name)
+            with tr.span("ae.round", set_name=set_name, pair=[a, b]):
+                self._ae_pull(a, b, set_name)
+                self._ae_pull(b, a, set_name)
             self.scheduler.stats.rounds += 1
         if self.sync:
             self.settle()
@@ -605,6 +694,9 @@ class BigsetCluster(_ClusterBase):
         ``apply_digest_reply`` is idempotent.
         """
         stats = self.scheduler.stats
+        tr = self.tracer
+        pull_span = (tr.start("ae.pull", set_name=set_name, dst=dst, src=src)
+                     if tr.enabled else None)
         vn = self.vnodes[dst]
         req = SyncRequest(set_name, vn.read_clock(set_name),
                           survivors_digest(vn, set_name))
@@ -626,9 +718,18 @@ class BigsetCluster(_ClusterBase):
             def handle_reply(dst_vn: BigsetVnode) -> None:
                 apply_digest_reply(dst_vn, reply)
 
-            self.net.send(src, dst, handle_reply, reply.size_bytes())
+            reply_payload = (
+                TracedPayload(pull_span.context(), handle_reply)
+                if pull_span is not None else handle_reply)
+            self.net.send(src, dst, reply_payload, reply.size_bytes())
 
-        self.net.send(dst, src, handle_request, req.size_bytes())
+        req_payload = (TracedPayload(pull_span.context(), handle_request)
+                       if pull_span is not None else handle_request)
+        self.net.send(dst, src, req_payload, req.size_bytes())
+        if pull_span is not None:
+            # the pull itself is async: the span closes at send time and
+            # the request/reply deliveries attach to it by carried context
+            tr.finish(pull_span)
 
     def ae_stats(self) -> AntiEntropyStats:
         """Scheduled anti-entropy cost ledger (sits next to io_stats())."""

@@ -22,7 +22,7 @@ class Message:
     src: str
     dst: str
     payload: Any
-    size_bytes: int = 0
+    size_bytes: int
 
 
 class Network:
@@ -42,7 +42,20 @@ class Network:
         self.msgs_sent = 0
         self.msgs_dropped = 0
 
-    def send(self, src: str, dst: str, payload: Any, size_bytes: int = 0) -> None:
+    def send(self, src: str, dst: str, payload: Any, size_bytes: int) -> None:
+        """Enqueue a message; ``size_bytes`` is its billed wire volume.
+
+        The parameter is **required**, and a non-empty payload billed at
+        zero raises: ``bytes_sent`` feeds every wire-cost comparison (and
+        now the ``net.*`` metrics), so an unbilled call site would make
+        those read 0 silently — the bug class this guard exists for.
+        Empty-payload control messages (``None``, ``b""``, ``0``) may
+        legitimately bill zero.
+        """
+        if size_bytes <= 0 and payload:
+            raise ValueError(
+                f"non-empty payload {type(payload).__name__} billed "
+                f"{size_bytes} wire bytes ({src}->{dst})")
         self.msgs_sent += 1
         self.bytes_sent += size_bytes
         if self.drop_prob and self.rng.random() < self.drop_prob:

@@ -3,8 +3,19 @@
 Dispatch: Pallas (interpret on CPU, compiled on TPU) or the pure-jnp
 reference.  The bigset read fold and delta-batch dedup call this with the
 tombstone / set-clock in dense form.
+
+Every call is tallied in the process-wide :data:`DISPATCHES` ledger
+(launch count + rows dispatched, padding included).  That ledger is the
+measured baseline for the ROADMAP cross-query micro-batcher: today 1000
+concurrent small queries pay 1000 launches over tiny arrays, and the only
+honest way to claim a coalescer wins is to watch ``launches`` fall while
+``rows`` holds.  ``benchmarks/bench_serve.py`` reports it as amortized
+launches/query; the metrics registry lifts it via
+:func:`repro.obs.metrics.lift_dispatch_stats`.
 """
 from __future__ import annotations
+
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +23,25 @@ import jax.numpy as jnp
 from ...core.vclock import DenseClock
 from .kernel import dot_seen_pallas
 from .ref import dot_seen_ref
+
+
+@dataclass
+class DispatchStats:
+    """Kernel-launch ledger: device calls and rows (dots) they covered."""
+
+    launches: int = 0       # dot_seen invocations (one device dispatch each)
+    rows: int = 0           # total rows dispatched, padding included
+    pallas_launches: int = 0  # subset of launches routed to the Pallas kernel
+
+    def snapshot(self) -> "DispatchStats":
+        return DispatchStats(**vars(self))
+
+    def delta(self, since: "DispatchStats") -> "DispatchStats":
+        return DispatchStats(
+            **{k: getattr(self, k) - getattr(since, k) for k in vars(self)})
+
+
+DISPATCHES = DispatchStats()
 
 
 def dot_seen(
@@ -25,7 +55,10 @@ def dot_seen(
     """bool[N] — which dots has ``clock`` seen?"""
     actors = jnp.asarray(actors, jnp.int32)
     counters = jnp.asarray(counters, jnp.int32)
+    DISPATCHES.launches += 1
+    DISPATCHES.rows += int(actors.shape[0])
     if use_pallas:
+        DISPATCHES.pallas_launches += 1
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         return dot_seen_pallas(

@@ -19,6 +19,8 @@ import argparse
 import time
 
 from ..cluster.clusters import BigsetCluster
+from ..obs.export import write_chrome_trace
+from ..obs.trace import Tracer
 from ..query.plan import Count, Scan
 from ..serve.bigset_service import (Backpressure, BigsetClient, BigsetService,
                                     ServiceConfig)
@@ -32,9 +34,13 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=500)
     ap.add_argument("--replicas", type=int, default=3)
     ap.add_argument("--budget-window", type=float, default=1.0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable tracing and write a Chrome trace-event "
+                         "file (load in chrome://tracing / Perfetto)")
     args = ap.parse_args(argv)
 
-    cluster = BigsetCluster(args.replicas)
+    tracer = Tracer() if args.trace_out else None
+    cluster = BigsetCluster(args.replicas, tracer=tracer)
     service = BigsetService(cluster)  # default config: generous budget
     client = BigsetClient(service)
 
@@ -108,6 +114,9 @@ def main(argv=None):
     print(f"membership ctx round-trip remove ok; count now {count}")
 
     client.close()
+    if tracer is not None:
+        write_chrome_trace(tracer.spans, args.trace_out)
+        print(f"wrote {len(tracer.spans)} spans -> {args.trace_out}")
     print("serve_bigset demo ok")
 
 

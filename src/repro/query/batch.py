@@ -43,11 +43,15 @@ class BatchVisibility:
         use_pallas: bool = False,
         interpret: Optional[bool] = None,
         min_batch: int = MIN_BATCH,
+        stats=None,
     ):
         self.tombstone = tombstone
         self.use_pallas = use_pallas
         self.interpret = interpret
         self.min_batch = min_batch
+        # per-query launch accounting (QueryStats.kernel_launches/_rows):
+        # the cross-query micro-batcher's per-query baseline
+        self.stats = stats
         self._dense = None
         self._actor_index: Dict[object, int] = {}
         self._sentinel = 0  # counter guaranteed unseen by the dense clock
@@ -104,6 +108,9 @@ class BatchVisibility:
             actors = np.pad(actors, (0, pad))
             counters = np.pad(
                 counters, (0, pad), constant_values=self._sentinel)
+        if self.stats is not None:
+            self.stats.kernel_launches += 1
+            self.stats.kernel_rows += n
         from ..kernels.dot_seen import dot_seen
 
         mask = dot_seen(

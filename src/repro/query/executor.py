@@ -65,6 +65,8 @@ class QueryStats:
     batches: int = 0
     keys_probed: int = 0   # point probes issued (membership / index lookup /
                            # gallop probes), counted on hits AND misses
+    kernel_launches: int = 0  # batched dot_seen dispatches this query paid
+    kernel_rows: int = 0      # dots those dispatches covered (pre-padding)
     strategy: str = ""     # join strategy the planner executed ("" otherwise)
 
 
@@ -328,7 +330,8 @@ class QueryExecutor:
         stats = stats if stats is not None else QueryStats()
         vis = BatchVisibility(
             self.vnode.read_tombstone(set_name),
-            use_pallas=self.use_pallas, interpret=self.interpret)
+            use_pallas=self.use_pallas, interpret=self.interpret,
+            stats=stats)
         return _EntryStream(
             self.vnode, set_name, vis, stats,
             start=start, end=end, after=after, batch_size=self.batch_size)
@@ -347,7 +350,8 @@ class QueryExecutor:
         stats = stats if stats is not None else QueryStats()
         vis = BatchVisibility(
             self.vnode.read_tombstone(set_name),
-            use_pallas=self.use_pallas, interpret=self.interpret)
+            use_pallas=self.use_pallas, interpret=self.interpret,
+            stats=stats)
         return _IndexStream(
             self.vnode, set_name, index_name, vis, stats,
             start=start, end=end, at=at, after=after,
@@ -452,7 +456,8 @@ class QueryExecutor:
         """
         vis = BatchVisibility(
             self.vnode.read_tombstone(set_name),
-            use_pallas=self.use_pallas, interpret=self.interpret)
+            use_pallas=self.use_pallas, interpret=self.interpret,
+            stats=stats)
         vnode = self.vnode
 
         def probe(element: bytes) -> Optional[DotList]:

@@ -44,6 +44,10 @@ import msgpack
 
 from ..cluster.clusters import BigsetCluster, ClusterSession
 from ..core.dots import Dot, DotList
+from ..obs.metrics import (MetricsRegistry, lift_ae_stats,
+                           lift_dispatch_stats, lift_io_stats, lift_network,
+                           lift_query_stats)
+from ..obs.trace import NULL_TRACER, Tracer
 from ..query import cursor as query_cursor
 from ..query.cursor import LeaseError, unwrap_lease, wrap_lease
 from ..query.executor import QueryResult
@@ -136,6 +140,8 @@ class BigsetService:
         cluster: BigsetCluster,
         config: Optional[ServiceConfig] = None,
         clock: Callable[[], float] = time.monotonic,
+        tracer: Optional[Tracer] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         self.cluster = cluster
         self.config = config or ServiceConfig()
@@ -146,6 +152,13 @@ class BigsetService:
         self._lease_seq = 0  # nonce: identical cursors get distinct tokens
         self._window_start = clock()
         self._window_bytes = 0
+        # observability: the tracer defaults to the CLUSTER's, so serve
+        # spans and cluster/replica/network spans land in one tree; the
+        # registry is the node-wide joined view the ``stats`` op snapshots
+        self.tracer = tracer or getattr(cluster, "tracer", None) or \
+            NULL_TRACER
+        self.metrics = metrics or MetricsRegistry()
+        self._session_stats: Dict[bytes, Dict[str, int]] = {}
         # observability counters (benchmarks read these)
         self.pages_served = 0
         self.mutations_applied = 0
@@ -153,20 +166,44 @@ class BigsetService:
 
     # -------------------------------------------------------------- transport
     def handle(self, request: bytes) -> bytes:
-        """One wire request in, one wire response out (the whole protocol)."""
+        """One wire request in, one wire response out (the whole protocol).
+
+        Every decodable request runs inside a ``serve.request`` root span
+        (op + final status), so the span trees of everything downstream —
+        cluster coordinator, per-replica coverage, storage, kernel,
+        network, read repair — hang off one serve-layer root per request.
+        Request latency lands in the ``serve.request_seconds`` histogram,
+        driven by the injectable service clock (deterministic in tests).
+        """
         try:
             op, body = self._decode_request(request)
-            status, out = self._dispatch(op, body)
-        except Backpressure as bp:
-            self.rejections += 1
-            status, out = STATUS_RETRY, {
-                "reason": bp.reason, "retry_after": bp.retry_after}
         except ServiceError as e:
-            status, out = STATUS_ERROR, {"error": e.kind, "message": str(e)}
-        except (PlanError, LeaseError, query_cursor.CursorError) as e:
-            kind = ("plan" if isinstance(e, PlanError)
-                    else "lease" if isinstance(e, LeaseError) else "cursor")
-            status, out = STATUS_ERROR, {"error": kind, "message": str(e)}
+            self.metrics.counter("serve.requests_undecodable").inc()
+            return msgpack.packb([WIRE_VERSION, STATUS_ERROR,
+                                  {"error": e.kind, "message": str(e)}])
+        t0 = self._clock()
+        with self.tracer.span("serve.request", op=op) as sp:
+            try:
+                status, out = self._dispatch(op, body)
+            except Backpressure as bp:
+                self.rejections += 1
+                self.metrics.counter("serve.rejections").inc()
+                status, out = STATUS_RETRY, {
+                    "reason": bp.reason, "retry_after": bp.retry_after}
+            except ServiceError as e:
+                status, out = STATUS_ERROR, {
+                    "error": e.kind, "message": str(e)}
+            except (PlanError, LeaseError, query_cursor.CursorError) as e:
+                kind = ("plan" if isinstance(e, PlanError)
+                        else "lease" if isinstance(e, LeaseError)
+                        else "cursor")
+                status, out = STATUS_ERROR, {
+                    "error": kind, "message": str(e)}
+            sp.set(status=status)
+        self.metrics.counter("serve.requests").inc()
+        self.metrics.counter(f"serve.requests.{op}").inc()
+        self.metrics.histogram("serve.request_seconds").observe(
+            self._clock() - t0)
         return msgpack.packb([WIRE_VERSION, status, out])
 
     def _decode_request(self, request: bytes) -> Tuple[str, dict]:
@@ -196,6 +233,8 @@ class BigsetService:
             return STATUS_OK, self._remove(body)
         if op == "batch":
             return STATUS_OK, self._batch(body)
+        if op == "stats":
+            return STATUS_OK, self._stats(body)
         raise ServiceError("request", f"unknown op {op!r}")
 
     # --------------------------------------------------------------- sessions
@@ -214,6 +253,7 @@ class BigsetService:
             raise ServiceError("session", f"unknown session {sid!r}")
         for token in sess.tokens:
             self._leases.pop(token, None)
+        self._session_stats.pop(sid, None)
         if sid == ANON_SESSION:  # the anon session is a fixture: recreate
             self._sessions[ANON_SESSION] = _Session()
         return {"closed": True, "released": len(sess.tokens)}
@@ -277,6 +317,10 @@ class BigsetService:
         r = self._quorum(body)
         repair = bool(body.get("repair", True))
         res = self.cluster.query(plan, r=r, repair=repair, session=self._acct)
+        lift_query_stats(self.metrics, res.stats)
+        self._note(sid, pages=1, bytes_read=res.stats.bytes_read,
+                   elements=res.stats.elements_emitted,
+                   kernel_launches=res.stats.kernel_launches)
 
         out = self._result_to_wire(res)
         if token is not None:
@@ -328,6 +372,37 @@ class BigsetService:
             if sess is not None:
                 sess.tokens.discard(token)
 
+    # ----------------------------------------------------------------- stats
+    def _note(self, sid: bytes, **deltas: int) -> None:
+        """Accumulate per-session usage (the ``stats`` op's session view)."""
+        acc = self._session_stats.setdefault(sid, {})
+        for k, v in deltas.items():
+            acc[k] = acc.get(k, 0) + v
+
+    def _stats(self, body: dict) -> dict:
+        """Metrics snapshot: the whole stack joined into one response.
+
+        ``node`` lifts every layer's stat struct — storage IoStats
+        (cluster-wide), anti-entropy ledger, simulated-network wire
+        counters, Pallas dispatch ledger, serve admission state — into the
+        uniformly named registry and snapshots it.  ``session`` is the
+        calling session's own usage.  Like every response, the envelope is
+        msgpack: a remote dashboard needs nothing but this op.
+        """
+        sid, _sess = self._session(body)
+        reg = self.metrics
+        lift_io_stats(reg, self.cluster.io_stats())
+        if hasattr(self.cluster, "ae_stats"):
+            lift_ae_stats(reg, self.cluster.ae_stats())
+        lift_network(reg, self.cluster.net)
+        lift_dispatch_stats(reg)
+        reg.gauge("serve.pages_served").set(self.pages_served)
+        reg.gauge("serve.mutations_applied").set(self.mutations_applied)
+        reg.gauge("serve.open_cursors").set(len(self._leases))
+        reg.gauge("serve.sessions").set(len(self._sessions))
+        return {"node": reg.snapshot(),
+                "session": dict(self._session_stats.get(sid, {}))}
+
     def _result_to_wire(self, res: QueryResult) -> dict:
         out: dict = {
             "entries": [[el, dots_to_wire(dots)] for el, dots in res.entries],
@@ -372,6 +447,7 @@ class BigsetService:
     # ------------------------------------------------------------- write path
     def _insert(self, body: dict) -> dict:
         set_name, element = self._set_element(body)
+        self._note(body.get("session", ANON_SESSION), mutations=1)
         delta = self.cluster.add(
             set_name, element,
             coordinator=self._coordinator(body),
@@ -382,6 +458,7 @@ class BigsetService:
 
     def _remove(self, body: dict) -> dict:
         set_name, element = self._set_element(body)
+        self._note(body.get("session", ANON_SESSION), mutations=1)
         ctx = body.get("ctx")
         delta = self.cluster.remove(
             set_name, element,
@@ -413,6 +490,7 @@ class BigsetService:
                 parsed.append(("remove", element, ctx))
             else:
                 raise ServiceError("request", f"unknown batch op {kind!r}")
+        self._note(body.get("session", ANON_SESSION), mutations=len(parsed))
         deltas = self.cluster.mutate(
             set_name, parsed, coordinator=coordinator, session=self._acct)
         results = []
@@ -543,6 +621,15 @@ class BigsetClient:
             cursor = page.cursor
             if cursor is None:
                 return
+
+    def stats(self) -> dict:
+        """Node-wide + this-session metrics snapshot (the ``stats`` op).
+
+        ``out["node"]`` is the registry snapshot — uniformly named
+        ``storage.* / antientropy.* / net.* / kernels.* / serve.* /
+        query.*`` metrics; ``out["session"]`` is this session's usage.
+        """
+        return self._call("stats", {"session": self.session})
 
     def membership(self, set_name: bytes, element: bytes,
                    r: Optional[int] = None) -> Tuple[bool, List[List]]:

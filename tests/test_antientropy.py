@@ -281,7 +281,7 @@ class TestSyncPathBugfixes:
         """Silently returning with queued traffic made settle() lie."""
         net = Network()
         for i in range(5):
-            net.send("a", "b", i)
+            net.send("a", "b", i, 8)
         with pytest.raises(DeliveryBudget):
             net.deliver_all(lambda m: None, max_steps=3)
         assert net.pending() == 2  # leftovers stay queued, not dropped

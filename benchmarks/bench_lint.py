@@ -1,0 +1,49 @@
+"""bigset-lint wall-time benchmark: analyzer cost stays visible.
+
+The lint job gates CI, so its runtime is a tax on every push — this row
+keeps that tax on the same dashboard as the paper tables.  Two rows:
+
+* ``full_pack_src`` — the shipped config over the whole ``src`` tree
+  (exactly what the CI lint job runs); derived column reports files,
+  rules, findings (must be 0), and suppressions.
+* ``per_file`` — the same run amortized per file, the number that should
+  stay flat as the tree and the rule pack both grow.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import List
+
+from repro.analysis import run_lint
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+
+
+def main(quick: bool = False) -> List[str]:
+    reps = 1 if quick else 3
+    best = None
+    result = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        result = run_lint([str(SRC)])
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    if result.findings:  # the gate itself: a dirty tree fails the bench too
+        raise RuntimeError(
+            "bigset-lint found violations in src:\n"
+            + "\n".join(f.render() for f in result.findings))
+    us = best * 1e6
+    rows = [
+        f"lint/full_pack_src,{us:.0f},files={result.files_checked};"
+        f"rules={len(result.rules)};findings=0;"
+        f"suppressed={result.suppressed}",
+        f"lint/per_file,{us / max(1, result.files_checked):.1f},"
+        f"amortized over {result.files_checked} files",
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

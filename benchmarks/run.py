@@ -20,14 +20,14 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: writes,reads,queries,joins,serve,"
-                         "antientropy,mixed,ckpt,kernels,roofline")
+                         "antientropy,mixed,ckpt,kernels,roofline,lint")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write a JSON metrics snapshot + rows to PATH")
     args = ap.parse_args(argv)
 
     from . import (bench_antientropy, bench_checkpoint, bench_joins,
-                   bench_kernels, bench_mixed, bench_queries, bench_reads,
-                   bench_serve, bench_writes, roofline)
+                   bench_kernels, bench_lint, bench_mixed, bench_queries,
+                   bench_reads, bench_serve, bench_writes, roofline)
 
     sections = {
         "writes": lambda: bench_writes.main(quick=args.quick),     # Tab1/Fig1-3
@@ -41,6 +41,7 @@ def main(argv=None) -> None:
         "ckpt": lambda: bench_checkpoint.main(quick=args.quick),   # framework
         "kernels": lambda: bench_kernels.main(quick=args.quick),
         "roofline": roofline.main,                                  # from dry-run
+        "lint": lambda: bench_lint.main(quick=args.quick),          # CI gate cost
     }
     only = set(args.only.split(",")) if args.only else set(sections)
 

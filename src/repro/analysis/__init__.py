@@ -1,0 +1,38 @@
+"""bigset-lint: project-specific static analysis over Python's ``ast``.
+
+The architecture's invariants (docs/ARCHITECTURE.md) are discipline the
+code cannot locally see — writes read only clocks, queries seek and
+never fold, every ``Network.send`` bills wire bytes, disabled tracing
+leaves traffic byte-identical.  This package turns the enforceable
+subset into CI-gated rules:
+
+========  ==========================================================
+BS001     deterministic layers read only injected clocks/RNGs
+BS002     ``Network.send`` call sites pass an explicit ``size_bytes``
+BS003     ``Clock``/``SetDigest`` fields mutated only in ``core/``
+BS004     library code raises typed exceptions, not bare ``assert``
+BS005     ``query/``/``serve/`` never call full-fold entry points
+BS006     ``kernels/*/kernel.py`` imports only the device stack
+========  ==========================================================
+
+Run it: ``python -m repro.analysis src`` (exit 1 on findings).  Silence
+a deliberate exception at its line, justification required::
+
+    ... # bigset-lint: disable=BS001 -- injectable default; tests inject
+
+Programmatic use: :func:`run_lint` returns a :class:`LintResult`; the
+per-rule ``NodeVisitor``s share one import/symbol
+:class:`~repro.analysis.resolve.Resolver` per file, and new rules
+register by decorating a :class:`~repro.analysis.rules.Rule` subclass
+with :func:`~repro.analysis.rules.register`.
+"""
+from .config import DEFAULT_CONFIG, LintConfig
+from .engine import FileContext, LintResult, lint_file, run_lint
+from .report import render_human, render_json, render_json_text
+from .rules import META_RULE, RULES, Finding, Rule, register
+
+__all__ = [
+    "DEFAULT_CONFIG", "LintConfig", "FileContext", "LintResult",
+    "lint_file", "run_lint", "render_human", "render_json",
+    "render_json_text", "META_RULE", "RULES", "Finding", "Rule", "register",
+]

@@ -1,0 +1,51 @@
+"""BS006 — device kernel files import only the device stack.
+
+``kernels/*/kernel.py`` is the Pallas-lowered device code; its siblings
+hold everything host-side (``ref.py``: the numpy reference the tests
+diff against; ``ops.py``: dispatch, padding, ledgers).  A ``numpy``
+import inside ``kernel.py`` is the classic smell that host logic leaked
+into the traced path — it either breaks lowering outright or, worse,
+runs at trace time and bakes host values into the compiled kernel.
+
+Allowed roots: ``jax`` (which includes ``jax.numpy`` and
+``jax.experimental.pallas``) plus compile-time stdlib
+(``functools``/``typing``/``math``/``__future__``).  Relative imports
+are flagged too: a kernel reaching into its own package is pulling host
+helpers across the device boundary.
+"""
+from __future__ import annotations
+
+import ast
+from fnmatch import fnmatch
+
+from .base import Rule, register
+
+
+@register
+class KernelImportRule(Rule):
+    id = "BS006"
+    title = "kernels/*/kernel.py imports only jax/pallas (+compile-time stdlib)"
+    invariant = "device/host split of the kernel packages"
+
+    def applies(self) -> bool:
+        return fnmatch(self.ctx.rel, self.ctx.config.kernel_glob)
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            self._check_root(node, alias.name.split(".")[0])
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.level > 0:
+            self.report(node, "relative import in a device kernel file — "
+                              "host-side helpers belong in ops.py/ref.py")
+            return
+        self._check_root(node, (node.module or "").split(".")[0])
+
+    def _check_root(self, node: ast.AST, root: str) -> None:
+        if root in self.ctx.config.kernel_allowed_roots:
+            return
+        hint = (" (host-side numpy belongs in ref.py)"
+                if root == "numpy" else "")
+        self.report(node, f"import of {root!r} in a device kernel file — "
+                          f"only {'/'.join(sorted(self.ctx.config.kernel_allowed_roots))} "
+                          f"may cross the device boundary{hint}")

@@ -84,13 +84,15 @@ def decode_attention_pallas(
 ) -> jax.Array:
     B, Hq, D = q.shape
     _, Hkv, S, _ = k_cache.shape
-    assert Hq % Hkv == 0
+    if Hq % Hkv != 0:
+        raise ValueError(f"GQA requires Hq % Hkv == 0, got {Hq} % {Hkv}")
     group = Hq // Hkv
     group_pad = max(8, group)  # sublane minimum
     if scale is None:
         scale = D ** -0.5
     block_kv = min(block_kv, S)
-    assert S % block_kv == 0
+    if S % block_kv != 0:
+        raise ValueError(f"cache length {S} not divisible by block_kv {block_kv}")
 
     # [B, Hkv, G, D] with the group padded to the sublane minimum
     qg = q.reshape(B, Hkv, group, D)

@@ -113,13 +113,17 @@ def flash_attention_pallas(
 ) -> jax.Array:
     B, Hq, T, D = q.shape
     _, Hkv, S, _ = k.shape
-    assert Hq % Hkv == 0, "GQA requires Hq % Hkv == 0"
+    if Hq % Hkv != 0:
+        raise ValueError(f"GQA requires Hq % Hkv == 0, got {Hq} % {Hkv}")
     group = Hq // Hkv
     if scale is None:
         scale = D ** -0.5
     block_q = min(block_q, T)
     block_kv = min(block_kv, S)
-    assert T % block_q == 0 and S % block_kv == 0
+    if T % block_q != 0 or S % block_kv != 0:
+        raise ValueError(
+            f"sequence lengths must tile the blocks: T={T} % block_q="
+            f"{block_q}, S={S} % block_kv={block_kv}")
 
     grid = (B * Hq, T // block_q, S // block_kv)
 

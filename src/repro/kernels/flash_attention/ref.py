@@ -41,7 +41,8 @@ def attention_ref(
     """
     B, Hq, T, D = q.shape
     _, Hkv, S, _ = k.shape
-    assert Hq % Hkv == 0
+    if Hq % Hkv != 0:
+        raise ValueError(f"GQA requires Hq % Hkv == 0, got {Hq} % {Hkv}")
     group = Hq // Hkv
     if scale is None:
         scale = D ** -0.5

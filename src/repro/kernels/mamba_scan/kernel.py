@@ -67,7 +67,10 @@ def mamba_scan_pallas(
     N = A.shape[1]
     block_d = min(block_d, Dm)
     chunk = min(chunk, T)
-    assert Dm % block_d == 0 and T % chunk == 0
+    if Dm % block_d != 0 or T % chunk != 0:
+        raise ValueError(
+            f"model dims must tile the blocks: Dm={Dm} % block_d={block_d}, "
+            f"T={T} % chunk={chunk}")
 
     grid = (Bsz, Dm // block_d, T // chunk)
 

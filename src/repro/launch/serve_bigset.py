@@ -28,6 +28,13 @@ from ..serve.bigset_service import (Backpressure, BigsetClient, BigsetService,
 SET = b"demo"
 
 
+def _expect(cond: bool, what: str) -> None:
+    """Demo self-check that survives ``python -O`` (the CI smoke runs this
+    launcher assert-stripped, so a bare assert would check nothing)."""
+    if not cond:
+        raise RuntimeError(f"serve_bigset demo failed: {what}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--elements", type=int, default=5000)
@@ -66,7 +73,8 @@ def main(argv=None):
                   f"{page.stats['bytes_read']}B read, "
                   f"{page.stats['num_seeks']} seeks")
     dt = time.perf_counter() - t0
-    assert seen == args.elements, (seen, args.elements)
+    _expect(seen == args.elements,
+            f"scan saw {seen} of {args.elements} elements")
     print(f"scanned {seen} elements in {n_pages} pages / {dt:.2f}s")
 
     # ---- saturation: an over-budget client is rejected, then resumes -----
@@ -89,8 +97,8 @@ def main(argv=None):
         slow.extend(page.members)
         if len(slow) >= 3 * args.page_size or page.cursor is None:
             break  # three pages prove the reject→resume cycle
-    assert slow == [b"%08d" % i for i in range(len(slow))], "pages drifted"
-    assert retries[0] > 0, "saturation demo never engaged backpressure"
+    _expect(slow == [b"%08d" % i for i in range(len(slow))], "pages drifted")
+    _expect(retries[0] > 0, "saturation demo never engaged backpressure")
     print(f"saturated scan: {len(slow)} elements under a 1-byte/"
           f"{args.budget_window:g}s budget, {retries[0]} retries, "
           f"no element re-emitted or skipped")
@@ -105,12 +113,13 @@ def main(argv=None):
                 backoff(bp.retry_after)
 
     present, ctx = ride_out(client.membership, SET, b"%08d" % 0)
-    assert present and ctx
+    _expect(present and bool(ctx), "inserted element not found by membership")
     client.remove(SET, b"%08d" % 0, ctx=ctx)
     present, _ = ride_out(client.membership, SET, b"%08d" % 0)
-    assert not present
+    _expect(not present, "element still visible after ctx remove")
     count = ride_out(client.query, Count(SET)).count
-    assert count == args.elements - 1, count
+    _expect(count == args.elements - 1,
+            f"count {count} != {args.elements - 1} after one remove")
     print(f"membership ctx round-trip remove ok; count now {count}")
 
     client.close()

@@ -107,7 +107,11 @@ def attention_forward(
 
     new_cache = None
     if mode == "decode" and kv_override is None:
-        assert cache is not None and cache_len is not None and T == 1
+        if cache is None or cache_len is None or T != 1:
+            raise ValueError(
+                f"decode mode needs a cache, cache_len, and T == 1 "
+                f"(got cache={cache is not None}, "
+                f"cache_len={cache_len is not None}, T={T})")
         k1 = k.transpose(0, 2, 1, 3)  # [B, Hkv, 1, Dh]
         v1 = v.transpose(0, 2, 1, 3)
         size = cache["k"].shape[2]

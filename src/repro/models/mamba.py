@@ -71,7 +71,10 @@ def mamba_forward(
 
     new_cache = None
     if mode == "decode":
-        assert cache is not None and T == 1
+        if cache is None or T != 1:
+            raise ValueError(
+                f"decode mode needs a conv cache and T == 1 "
+                f"(got cache={cache is not None}, T={T})")
         hist = cache["conv"].astype(dt)
         conv_out = _causal_conv(xi, p["conv_w"].astype(dt), p["conv_b"].astype(dt), hist)
         new_conv = jnp.concatenate([hist, xi], axis=1)[:, 1:, :].astype(dt)

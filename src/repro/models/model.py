@@ -119,7 +119,9 @@ class Model(NamedTuple):
 
             def split(leaf):
                 b = leaf.shape[0]
-                assert b % mbs == 0, (b, mbs)
+                if b % mbs != 0:
+                    raise ValueError(
+                        f"batch {b} not divisible by {mbs} microbatches")
                 return leaf.reshape((mbs, b // mbs) + leaf.shape[1:])
 
             mb_batch = jax.tree_util.tree_map(split, batch)

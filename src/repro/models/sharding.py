@@ -73,7 +73,9 @@ def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
     r = current_rules()
     if r is None:
         return x
-    assert x.ndim == len(logical), (x.shape, logical)
+    if x.ndim != len(logical):
+        raise ValueError(
+            f"axis annotation arity mismatch: {x.shape} vs {logical}")
     spec = []
     used: set = set()
     for dim, l in zip(x.shape, logical):

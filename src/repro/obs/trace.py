@@ -94,7 +94,7 @@ class Tracer:
 
     enabled = True
 
-    def __init__(self, clock: Callable[[], float] = time.monotonic):
+    def __init__(self, clock: Callable[[], float] = time.monotonic):  # bigset-lint: disable=BS001 -- default for the *injectable* clock; deterministic runs inject a fake (tests/test_obs.py)
         self._clock = clock
         self._next_id = 0
         self._stack: List[Span] = []

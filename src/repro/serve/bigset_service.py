@@ -139,7 +139,7 @@ class BigsetService:
         self,
         cluster: BigsetCluster,
         config: Optional[ServiceConfig] = None,
-        clock: Callable[[], float] = time.monotonic,
+        clock: Callable[[], float] = time.monotonic,  # bigset-lint: disable=BS001 -- default for the *injectable* lease/budget clock; tests inject a fake
         tracer: Optional[Tracer] = None,
         metrics: Optional[MetricsRegistry] = None,
     ):
@@ -242,7 +242,7 @@ class BigsetService:
         # unguessable: the id is the session's only credential — a
         # predictable one would let any client close (or probe) a
         # neighbor's session and destroy its cursor leases
-        sid = b"s" + secrets.token_hex(16).encode()
+        sid = b"s" + secrets.token_hex(16).encode()  # bigset-lint: disable=BS001 -- the session id is a credential: unguessability beats replayability, and nothing downstream branches on its value
         self._sessions[sid] = _Session()
         return {"session": sid}
 

@@ -6,7 +6,7 @@ consult the set-tombstone.  This package provides that substrate with full
 byte accounting (bytes read / written / compacted), which is the cost model
 the paper's §2.1 analysis and Figures 1-3 are built on.
 """
-from .keycodec import decode_key, encode_key
+from .keycodec import KeyCodecError, decode_key, encode_key
 from .lsm import IoStats, LsmStore
 
-__all__ = ["encode_key", "decode_key", "LsmStore", "IoStats"]
+__all__ = ["encode_key", "decode_key", "KeyCodecError", "LsmStore", "IoStats"]

@@ -25,6 +25,16 @@ from __future__ import annotations
 import struct
 from typing import Tuple
 
+class KeyCodecError(ValueError):
+    """Malformed, truncated, or out-of-range key material.
+
+    Typed (and a ``ValueError`` subclass, so pre-existing handlers keep
+    working) rather than an assert or a leaked ``struct.error``: the
+    ``python -O`` CI job runs with asserts stripped, and sync/serve paths
+    decode peer-supplied keys — they must fail loudly on garbage.
+    """
+
+
 KIND_CLOCK = 0
 KIND_TOMBSTONE = 1
 KIND_ELEMENT = 2
@@ -47,7 +57,7 @@ def encode_key(parts: Tuple) -> bytes:
             out += _TERM
         elif isinstance(p, int):
             if p < 0 or p >= 1 << 64:
-                raise ValueError(f"int key component out of range: {p}")
+                raise KeyCodecError(f"int key component out of range: {p}")
             out += _INT_TAG
             out += struct.pack(">Q", p)
         else:
@@ -65,7 +75,10 @@ def decode_key(key: bytes) -> Tuple:
         if tag == _STR_TAG:
             buf = bytearray()
             while True:
-                j = key.index(b"\x00", i)
+                j = key.find(b"\x00", i)
+                if j < 0:
+                    raise KeyCodecError(
+                        f"unterminated string component at offset {i}")
                 nxt = key[j : j + 2]
                 if nxt == _TERM:
                     buf += key[i:j]
@@ -75,13 +88,18 @@ def decode_key(key: bytes) -> Tuple:
                     buf += key[i:j] + b"\x00"
                     i = j + 2
                 else:
-                    raise ValueError("malformed escaped string in key")
+                    raise KeyCodecError(
+                        f"malformed escape at offset {j} in string component")
             parts.append(bytes(buf))
         elif tag == _INT_TAG:
+            if n - i < 8:
+                raise KeyCodecError(
+                    f"truncated int component at offset {i}: "
+                    f"{n - i} of 8 bytes")
             parts.append(struct.unpack(">Q", key[i : i + 8])[0])
             i += 8
         else:
-            raise ValueError(f"bad tag byte {tag!r} at offset {i - 1}")
+            raise KeyCodecError(f"bad tag byte {tag!r} at offset {i - 1}")
     return tuple(parts)
 
 

@@ -1,0 +1,18 @@
+"""BS002 fixture: billed sends, and .send on non-network receivers."""
+from repro.cluster.sim import Network
+
+
+class Pipe:
+    def send(self, item):                    # unrelated .send: fine
+        return item
+
+
+class Fanout:
+    def __init__(self):
+        self.net = Network()
+        self.pipe = Pipe()
+
+    def broadcast(self, payload, size):
+        self.net.send("a", "b", payload, size)            # 4 positional
+        self.net.send("a", "b", payload, size_bytes=size)  # keyword
+        self.pipe.send(payload)              # receiver resolves to Pipe

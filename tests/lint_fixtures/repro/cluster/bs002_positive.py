@@ -1,0 +1,16 @@
+"""BS002 fixture: Network.send without explicit size_bytes."""
+from repro.cluster.sim import Network
+
+
+class Fanout:
+    def __init__(self, net=None):
+        self.net = net or Network()
+
+    def broadcast(self, payload):
+        # type-resolved receiver (self.net = Network()): missing size_bytes
+        self.net.send("a", "b", payload)     # BS002
+
+
+def relay(net, payload):
+    # hint-resolved receiver (parameter named ``net``): missing size_bytes
+    net.send("a", "b", payload)              # BS002

@@ -1,0 +1,6 @@
+"""BS002 fixture: justified suppression of an unbilled send."""
+from repro.cluster.sim import Network
+
+
+def ping(net: Network):
+    net.send("a", "b", None)  # bigset-lint: disable=BS002 -- fixture: empty control ping bills zero by design

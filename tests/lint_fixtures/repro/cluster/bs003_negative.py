@@ -1,0 +1,15 @@
+"""BS003 fixture: same field names on provably different types are fine."""
+
+
+class Ledger:
+    def __init__(self):
+        self.base = 0.0          # Ledger.base, not Clock.base
+        self.counts = []         # Ledger.counts, not SetDigest.counts
+
+    def bump(self):
+        self.base += 1.0
+        self.counts.append(self.base)
+
+
+def rebase(ledger: Ledger):
+    ledger.base = 0.0            # annotated param resolves to Ledger

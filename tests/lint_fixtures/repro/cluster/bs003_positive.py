@@ -1,0 +1,17 @@
+"""BS003 fixture: Clock/SetDigest mutation outside core/."""
+from repro.core.bigset import SetDigest
+from repro.core.clock import Clock
+
+
+def corrupt(actor):
+    c = Clock()
+    c.base = {actor: 1}                      # BS003: typed receiver
+    c.cloud[actor] = frozenset({3})          # BS003: item write through field
+    d = SetDigest()
+    d.fences = []                            # BS003: typed receiver
+    return c, d
+
+
+def sneaky(c):
+    # receiver type unresolvable -> conservative finding
+    c.base = {}                              # BS003

@@ -1,0 +1,5 @@
+"""BS005 fixture: anti-entropy's full_sync baseline may fold (not query/serve)."""
+
+
+def full_sync(vnode, set_name):
+    return list(vnode.fold(set_name))        # cluster/: out of BS005 scope

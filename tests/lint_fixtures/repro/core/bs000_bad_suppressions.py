@@ -1,0 +1,9 @@
+"""BS000 fixture: malformed suppressions are lint debt themselves."""
+
+
+def f(x):
+    return x  # bigset-lint: disable=BS999 -- fixture: no such rule
+
+
+def g(x):
+    assert x  # bigset-lint: disable=BS004

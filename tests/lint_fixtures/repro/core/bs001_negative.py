@@ -1,0 +1,15 @@
+"""BS001 fixture: injected clocks and seeded RNGs are the sanctioned idiom."""
+import random
+
+import numpy as np
+
+
+class Sim:
+    def __init__(self, seed: int, clock):
+        self.rng = random.Random(seed)       # seeded factory: allowed
+        self.gen = np.random.default_rng(seed)
+        self.clock = clock                   # injected, not read from time
+
+    def step(self):
+        # instance RNG + injected clock: deterministic given (seed, clock)
+        return self.rng.random(), self.gen.random(), self.clock()

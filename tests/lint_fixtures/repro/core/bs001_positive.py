@@ -1,0 +1,38 @@
+"""BS001 fixture: wall clocks and ambient randomness in a deterministic layer."""
+import random
+import time
+from datetime import datetime
+
+import numpy as np
+
+
+def stamp():
+    return time.time()                       # BS001: wall clock
+
+
+def stamp_mono():
+    return time.monotonic()                  # BS001: wall clock
+
+
+def when():
+    return datetime.now()                    # BS001: wall clock
+
+
+def jitter():
+    return random.random()                   # BS001: process-global RNG
+
+
+def pick(xs):
+    return random.choice(xs)                 # BS001: process-global RNG
+
+
+def make_rng():
+    return random.Random()                   # BS001: unseeded factory
+
+
+def noise(n):
+    return np.random.rand(n)                 # BS001: process-global RNG
+
+
+def gen():
+    return np.random.default_rng()           # BS001: unseeded factory

@@ -1,0 +1,6 @@
+"""BS001 fixture: a justified line suppression silences the finding."""
+import time
+
+
+def default_clock():
+    return time.monotonic()  # bigset-lint: disable=BS001 -- fixture: default for an injectable clock

@@ -1,0 +1,5 @@
+"""BS001 fixture: a suppression on a clean line is itself a finding (BS000)."""
+
+
+def tick(clock):
+    return clock()  # bigset-lint: disable=BS001 -- fixture: nothing here triggers BS001

@@ -1,0 +1,8 @@
+"""BS003 fixture: core/ is the mutation home — assignments here are legal."""
+from .clock import Clock
+
+
+def _rebuild(c: Clock, base, cloud):
+    c.base = base                # allowed: this is core/
+    c.cloud = cloud
+    return c

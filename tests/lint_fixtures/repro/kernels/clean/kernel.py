@@ -1,0 +1,16 @@
+"""BS006 fixture: the device stack plus compile-time stdlib is allowed."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def kernel(x) -> Tuple:
+    del functools, math, jax, jnp, pl, pltpu
+    return (x,)

@@ -1,0 +1,14 @@
+"""BS006 fixture: host-side imports leaking into a device kernel file."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np                           # BS006: numpy belongs in ref.py
+from jax.experimental import pallas as pl
+
+from .ref import reference_impl              # BS006: relative import
+
+
+def kernel(x):
+    del functools, jax, jnp, np, pl, reference_impl
+    return x

@@ -1,0 +1,6 @@
+"""BS006 fixture sibling: numpy is at home in ref.py (rule scope excludes it)."""
+import numpy as np
+
+
+def reference_impl(x):
+    return np.asarray(x)

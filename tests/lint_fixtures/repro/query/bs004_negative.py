@@ -1,0 +1,8 @@
+"""BS004 fixture: typed exceptions survive python -O."""
+
+
+def page_size_of(req):
+    size = req.get("page_size", 0)
+    if size <= 0:
+        raise ValueError("page_size must be positive")
+    return size

@@ -1,0 +1,12 @@
+"""BS004 fixture: bare asserts as validation in library code."""
+
+
+def page_size_of(req):
+    size = req.get("page_size", 0)
+    assert size > 0, "page_size must be positive"   # BS004: stripped by -O
+    return size
+
+
+def decode(buf):
+    assert isinstance(buf, bytes)                   # BS004
+    return buf

@@ -1,0 +1,13 @@
+"""BS005 fixture: bounded seeks are the sanctioned query-layer surface."""
+
+
+def members_in(vnode, set_name, lo, hi):
+    return [e for e, _d, _v in vnode.fold_raw(set_name, start=lo, end=hi)]
+
+
+def postings(vnode, set_name, index):
+    return list(vnode.fold_postings(set_name, index))
+
+
+def window(store, lo, hi):
+    return list(store.scan(lo, hi))          # bounded scan: fine

@@ -1,0 +1,13 @@
+"""BS005 fixture: full folds from the seek-only query layer."""
+
+
+def slow_members(vnode, set_name):
+    return [e for e, _dot in vnode.fold(set_name)]        # BS005
+
+
+def slow_count(vnode, set_name):
+    return len(vnode.value(set_name))                     # BS005
+
+
+def slow_everything(store):
+    return list(store.scan())                             # BS005: unbounded

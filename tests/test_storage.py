@@ -1,8 +1,9 @@
 """LSM store + order-preserving key codec tests."""
+import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.storage.keycodec import (KIND_ELEMENT, KIND_INDEX, decode_key,
-                                    encode_key, prefix_bounds,
+from repro.storage.keycodec import (KIND_ELEMENT, KIND_INDEX, KeyCodecError,
+                                    decode_key, encode_key, prefix_bounds,
                                     successor_bytes)
 from repro.storage.lsm import LsmStore
 
@@ -60,6 +61,44 @@ class TestKeyCodec:
         succ = successor_bytes(b)
         assert b < succ
         assert succ <= b + ext  # nothing fits strictly between b and b+nul
+
+
+class TestKeyCodecErrors:
+    """Malformed keys raise the typed ``KeyCodecError`` — never a leaked
+    ``struct.error`` or a vanishing assert (the ``python -O`` smoke job
+    runs these paths with asserts stripped)."""
+
+    @pytest.mark.parametrize("bad", [
+        b"\x02abc",          # int tag but only 3 payload bytes
+        b"\x02",             # int tag, no payload at all
+        b"\x01abc",          # string tag, never terminated
+        b"\x01abc\x00",      # lone 0x00: neither terminator nor escape
+        b"\x01abc\x00\x02",  # bogus escape pair
+        b"\x03xyz",          # unknown tag byte
+    ])
+    def test_malformed_keys_raise_typed(self, bad):
+        with pytest.raises(KeyCodecError):
+            decode_key(bad)
+
+    def test_keycodec_error_is_a_value_error(self):
+        assert issubclass(KeyCodecError, ValueError)
+        with pytest.raises(ValueError):  # pre-existing handlers still work
+            decode_key(b"\x02ab")
+
+    def test_encode_rejects_out_of_range_int(self):
+        with pytest.raises(KeyCodecError):
+            encode_key((1 << 64,))
+        with pytest.raises(KeyCodecError):
+            encode_key((-1,))
+
+    @given(key_tuple)
+    def test_truncations_never_leak_untyped(self, t):
+        full = encode_key(t)
+        for cut in range(len(full)):
+            try:
+                decode_key(full[:cut])
+            except KeyCodecError:
+                pass  # typed failure is the contract
 
 
 class TestLsm:

@@ -40,6 +40,19 @@ def run_writes(cluster, n: int) -> Dict[str, float]:
     }
 
 
+def run_durable(n: int, group_depth: int) -> Dict[str, float]:
+    """Durable bigset writes: WAL + group commit at the given depth."""
+    cluster = BigsetCluster(3, durable=True, group_depth=group_depth)
+    r = run_writes(cluster, n)
+    cluster.sync_all()                            # ack the tail
+    io = cluster.io_stats()
+    r["bytes_wal"] = io.bytes_wal
+    r["num_fsyncs"] = io.num_fsyncs
+    # each coordinated add lands one batch on every replica
+    r["batches"] = n * len(cluster.actors)
+    return r
+
+
 def main(cards=(500, 2000, 5000), quick=False) -> List[str]:
     if quick:
         cards = (200, 500, 1000)
@@ -53,6 +66,18 @@ def main(cards=(500, 2000, 5000), quick=False) -> List[str]:
                 f"tp={r['throughput_ops_s']:.0f}ops/s;mean={r['mean_us']:.0f}us;"
                 f"p95={r['p95_us']:.0f}us;bytes_per_op={r['bytes_per_op']:.0f};"
                 f"net={r['net_bytes']}")
+        for depth in (1, 8):
+            r = run_durable(n, depth)
+            if depth >= 8 and not r["num_fsyncs"] < r["batches"]:
+                raise RuntimeError(
+                    f"group commit did not amortize: {r['num_fsyncs']} fsyncs "
+                    f"for {r['batches']} batches at depth {depth}")
+            rows.append(
+                f"writes/bigset-durable-d{depth}/{n},"
+                f"{1e6 / r['throughput_ops_s']:.1f},"
+                f"tp={r['throughput_ops_s']:.0f}ops/s;mean={r['mean_us']:.0f}us;"
+                f"fsyncs={r['num_fsyncs']};batches={r['batches']};"
+                f"wal_bytes={r['bytes_wal']}")
     return rows
 
 

@@ -13,6 +13,7 @@ BS003     ``Clock``/``SetDigest`` fields mutated only in ``core/``
 BS004     library code raises typed exceptions, not bare ``assert``
 BS005     ``query/``/``serve/`` never call full-fold entry points
 BS006     ``kernels/*/kernel.py`` imports only the device stack
+BS007     ``storage/`` memtables mutate only in WAL-billed entry points
 ========  ==========================================================
 
 Run it: ``python -m repro.analysis src`` (exit 1 on findings).  Silence

@@ -66,6 +66,15 @@ class LintConfig:
     kernel_allowed_roots: FrozenSet[str] = frozenset(
         {"__future__", "jax", "functools", "typing", "math"})
 
+    # ----------------------------------------------------------- BS007 scope
+    #: the layer whose memtables are WAL-guarded (invariant 11)
+    memtable_layer: str = "storage/"
+    #: functions allowed to mutate a ``memtable``: the WAL-billed write
+    #: path, the flush/recovery lifecycle, and construction — everything
+    #: else would apply state a crash could not replay
+    memtable_entrypoints: FrozenSet[str] = frozenset(
+        {"__init__", "put_batch", "flush", "recover"})
+
     # ------------------------------------------------------------------ misc
     def runs(self, rule_id: str) -> bool:
         if rule_id in self.ignore:

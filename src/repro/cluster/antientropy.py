@@ -330,6 +330,7 @@ class AntiEntropyStats:
     repair_hits: int = 0      # read-repair replays observed by the query path
     repair_misses: int = 0    # quorum checks where every replica had the dot
     repair_no_donor: int = 0  # repairs skipped: no replica could supply a value
+    rounds_crashed: int = 0   # rounds not attempted: a member was crashed
 
 
 class AntiEntropyScheduler:

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import msgpack
 from dataclasses import dataclass
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from ..core.bigset import BigsetVnode, InsertDelta, RemoveDelta
 from ..core.clock import Clock
@@ -36,10 +36,15 @@ from ..query.executor import (QueryExecutor, QueryResult, QueryStats,
                               stream_entries, zipper_join)
 from ..query.planner import GALLOP, choose_join, quorum_side_stats
 from ..storage.lsm import LsmStore
+from ..storage.wal import DurableMedia, RecoveryResult
 from .antientropy import (AntiEntropyScheduler, AntiEntropyStats,
                           SyncRequest, apply_digest_reply,
                           build_digest_reply, survivors_digest)
 from .sim import Message, Network
+
+
+class VnodeDown(RuntimeError):
+    """An operation was routed to a crashed vnode (crash()ed, not restarted)."""
 
 
 # ------------------------------------------------------------ serve sessions
@@ -223,21 +228,107 @@ class DeltaCluster(RiakSetCluster):
 
 
 class BigsetCluster(_ClusterBase):
-    """Decomposed bigset cluster (§4)."""
+    """Decomposed bigset cluster (§4).
+
+    ``durable=True`` gives every vnode a :class:`DurableMedia`-backed
+    store (WAL + group commit at ``group_depth``); :meth:`crash` /
+    :meth:`restart` then model the ROADMAP's "node restarts under
+    traffic" fault: a crash drops the vnode's in-memory state and its
+    unsynced WAL tail, a restart replays the durable prefix and scheduled
+    anti-entropy (:meth:`tick`) heals the rest from peers.
+    """
 
     def __init__(self, n_replicas: int = 3, net: Optional[Network] = None,
                  sync: bool = True,
                  scheduler: Optional[AntiEntropyScheduler] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 durable: bool = False, group_depth: int = 8,
+                 media: Optional[Dict[str, DurableMedia]] = None):
         super().__init__(n_replicas, net, sync)
-        self.vnodes: Dict[str, BigsetVnode] = {
-            a: BigsetVnode(a) for a in self.actors
-        }
+        self.durable = durable or media is not None
+        self.group_depth = group_depth
+        if self.durable:
+            self.media: Optional[Dict[str, DurableMedia]] = (
+                media or {a: DurableMedia() for a in self.actors})
+            self.vnodes: Dict[str, BigsetVnode] = {
+                a: BigsetVnode(a, store=LsmStore(
+                    media=self.media[a], group_depth=group_depth))
+                for a in self.actors
+            }
+        else:
+            self.media = None
+            self.vnodes = {a: BigsetVnode(a) for a in self.actors}
+        self.crashed: Set[str] = set()
+        # index specs by (set, index name): a restarted vnode re-registers
+        # them so downstream extractors keep running identically everywhere
+        self._index_specs: Dict[bytes, Dict[bytes, IndexSpec]] = {}
         # read repair feeds this; tick() drains it (see antientropy module)
         self.scheduler = scheduler or AntiEntropyScheduler(self.actors)
         # observability: NULL_TRACER by default — disabled tracing wraps no
         # payloads and records no spans (zero behavior change, invariant 10)
         self.tracer = tracer or NULL_TRACER
+
+    # ------------------------------------------------------- crash / restart
+    def _actor(self, vnode) -> str:
+        return self.actors[vnode] if isinstance(vnode, int) else vnode
+
+    def _coordinator(self, coordinator: int) -> str:
+        actor = self.actors[coordinator]
+        if actor in self.crashed:
+            raise VnodeDown(f"{actor} is crashed")
+        return actor
+
+    def crash(self, vnode) -> None:
+        """Kill a vnode: memtable, digests, and the unsynced WAL tail are
+        gone; the durable media survives for :meth:`restart`.  In-flight
+        and future traffic to the vnode is dropped by the network."""
+        if not self.durable:
+            raise RuntimeError("crash() requires a durable cluster")
+        actor = self._actor(vnode)
+        if actor in self.crashed:
+            return
+        self.crashed.add(actor)
+        self.vnodes.pop(actor, None)
+        self.media[actor].crash()
+        self.net.blackhole(actor)
+
+    def restart(self, vnode) -> RecoveryResult:
+        """Bring a crashed vnode back from its durable media.
+
+        A fresh store replays manifested segments + the WAL's acknowledged
+        prefix (``storage.recover`` span); the new vnode adopts it — its
+        per-set digests rebuild from one background fold on first touch —
+        and re-registers every known index spec without backfill (postings
+        were durable alongside their element-keys).  The unacknowledged
+        tail is *not* back: scheduled anti-entropy heals it from peers,
+        dot-bounded.  Returns the replay's :class:`RecoveryResult`.
+        """
+        actor = self._actor(vnode)
+        if actor not in self.crashed:
+            raise RuntimeError(f"{actor} is not crashed")
+        store = LsmStore(media=self.media[actor],
+                         group_depth=self.group_depth)
+        with self.tracer.span("storage.recover", actor=actor) as sp:
+            rec = store.recover()
+            sp.set(segments=rec.segments,
+                   batches_replayed=rec.batches_replayed,
+                   batches_skipped=rec.batches_skipped,
+                   bytes_replayed=rec.bytes_replayed,
+                   torn_bytes=rec.torn_bytes)
+        vn = BigsetVnode(actor, store=store)
+        for set_name, specs in self._index_specs.items():
+            for spec in specs.values():
+                vn.register_index(set_name, spec, backfill=False)
+        self.vnodes[actor] = vn
+        self.net.heal(actor)
+        self.crashed.discard(actor)
+        return rec
+
+    def sync_all(self) -> None:
+        """Force the pending group commit on every live vnode — the write
+        path's explicit acknowledgement barrier."""
+        for vn in self.vnodes.values():
+            vn.store.sync()
 
     def _traced(self, ctx_span, payload):
         """Wrap a payload with the span's context iff tracing is enabled."""
@@ -254,7 +345,7 @@ class BigsetCluster(_ClusterBase):
         layer round-trips it to clients as the context for a later remove
         or replacing add.
         """
-        actor = self.actors[coordinator]
+        actor = self._coordinator(coordinator)
         self.scheduler.note_set(set_name)
         with self.tracer.span("cluster.insert", set_name=set_name,
                               actor=actor) as sp:
@@ -269,7 +360,9 @@ class BigsetCluster(_ClusterBase):
     def register_index(self, set_name: bytes, spec: IndexSpec,
                        backfill: bool = True) -> int:
         """Register a secondary index on every replica (extractors must run
-        identically downstream).  Returns total backfill postings written."""
+        identically downstream).  Returns total backfill postings written.
+        The spec is remembered so a restarted vnode re-registers it."""
+        self._index_specs.setdefault(set_name, {})[spec.name] = spec
         return sum(
             vn.register_index(set_name, spec, backfill=backfill)
             for vn in self.vnodes.values())
@@ -281,7 +374,7 @@ class BigsetCluster(_ClusterBase):
         """Observed-remove: ctx defaults to a local membership probe (§4.3.2
         — "the client **must** provide a context for a remove").  Returns
         the shipped delta, or None when there was nothing to remove."""
-        actor = self.actors[coordinator]
+        actor = self._coordinator(coordinator)
         vn = self.vnodes[actor]
         self.scheduler.note_set(set_name)
         if ctx is None:
@@ -373,7 +466,14 @@ class BigsetCluster(_ClusterBase):
         query_plan.validate(plan)
         if r is None:
             r = self.n // 2 + 1
-        actors = self.actors[:r]
+        # coverage planning routes around crashed replicas: a non-quorum
+        # crash leaves reads fully available (restart-under-traffic)
+        live = [a for a in self.actors if a not in self.crashed]
+        if len(live) < r:
+            raise VnodeDown(
+                f"need {r} replicas, {len(live)} live ({sorted(self.crashed)}"
+                " crashed)")
+        actors = live[:r]
         tr = self.tracer
         with tr.span("cluster.query", plan=type(plan).__name__,
                      set_name=getattr(plan, "set_name", b""), r=r) as qspan:
@@ -675,14 +775,21 @@ class BigsetCluster(_ClusterBase):
         """
         rounds = self.scheduler.next_rounds(budget)
         tr = self.tracer
+        started = 0
         for set_name, a, b in rounds:
+            if a in self.crashed or b in self.crashed:
+                # a dead member can neither pull nor answer; the scheduler
+                # keeps the pair queued for a post-restart tick
+                self.scheduler.stats.rounds_crashed += 1
+                continue
             with tr.span("ae.round", set_name=set_name, pair=[a, b]):
                 self._ae_pull(a, b, set_name)
                 self._ae_pull(b, a, set_name)
             self.scheduler.stats.rounds += 1
+            started += 1
         if self.sync:
             self.settle()
-        return len(rounds)
+        return started
 
     def _ae_pull(self, dst: str, src: str, set_name: bytes) -> None:
         """``dst`` pulls ``set_name`` from ``src``: request and reply are

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 
 class DeliveryBudget(RuntimeError):
@@ -41,6 +41,18 @@ class Network:
         self.bytes_sent = 0
         self.msgs_sent = 0
         self.msgs_dropped = 0
+        # Crashed actors: traffic to them is dropped at send time AND at
+        # delivery time — messages queued before the crash must not arrive
+        # at a vnode that no longer exists.
+        self.blackholes: Set[str] = set()
+
+    def blackhole(self, actor: str) -> None:
+        """Start dropping all traffic addressed to ``actor`` (crashed)."""
+        self.blackholes.add(actor)
+
+    def heal(self, actor: str) -> None:
+        """Stop blackholing ``actor`` (restarted)."""
+        self.blackholes.discard(actor)
 
     def send(self, src: str, dst: str, payload: Any, size_bytes: int) -> None:
         """Enqueue a message; ``size_bytes`` is its billed wire volume.
@@ -57,7 +69,10 @@ class Network:
                 f"non-empty payload {type(payload).__name__} billed "
                 f"{size_bytes} wire bytes ({src}->{dst})")
         self.msgs_sent += 1
-        self.bytes_sent += size_bytes
+        self.bytes_sent += size_bytes  # billed even if dropped: it was sent
+        if dst in self.blackholes:
+            self.msgs_dropped += 1
+            return
         if self.drop_prob and self.rng.random() < self.drop_prob:
             self.msgs_dropped += 1
             return
@@ -73,6 +88,9 @@ class Network:
             return False
         idx = self.rng.randrange(len(self.queue)) if self.reorder else 0
         msg = self.queue.pop(idx)
+        if msg.dst in self.blackholes:
+            self.msgs_dropped += 1  # queued before the crash, never arrives
+            return True
         handler(msg)
         return True
 

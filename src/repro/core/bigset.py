@@ -381,7 +381,10 @@ class BigsetVnode:
     def __init__(self, actor: ActorId, store: Optional[LsmStore] = None,
                  digest_bucket_limit: int = 2048):
         self.actor = actor
-        self.store = store or LsmStore()
+        # `store or LsmStore()` would silently discard an injected *empty*
+        # store (LsmStore defines __len__, and a fresh store is falsy) —
+        # fatal for durable stores injected before their first write
+        self.store = store if store is not None else LsmStore()
         self.store.compaction_filter = self._compaction_filter
         self.store.on_discard = self._on_discard
         self._discarded: Dict[bytes, List[Dot]] = {}

@@ -156,6 +156,23 @@ def lift_io_stats(reg: MetricsRegistry, io, prefix: str = "storage") -> None:
     lift_struct(reg, prefix, io)
 
 
+def lift_durable_media(reg: MetricsRegistry, media,
+                       prefix: str = "storage.media") -> None:
+    """:class:`~repro.storage.wal.DurableMedia` counters → gauges.
+
+    ``wal_fsyncs`` against the store's batch count is the group-commit
+    amortization evidence (fsyncs < batches at depth > 1); ``crashes``
+    and the durable log size round out the fault ledger.  The replay-side
+    counters (``bytes_recovered``, ``num_recoveries``) already ride
+    :func:`lift_io_stats` — IoStats lifting is vars()-driven.
+    """
+    reg.gauge(f"{prefix}.wal_fsyncs").set(media.wal_fsyncs)
+    reg.gauge(f"{prefix}.file_fsyncs").set(media.file_fsyncs)
+    reg.gauge(f"{prefix}.wal_durable_bytes").set(len(media.wal))
+    reg.gauge(f"{prefix}.wal_pending_bytes").set(media.wal_pending())
+    reg.gauge(f"{prefix}.crashes").set(media.crashes)
+
+
 def lift_query_stats(reg: MetricsRegistry, stats,
                      prefix: str = "query") -> None:
     """One query's :class:`~repro.query.executor.QueryStats` accumulated

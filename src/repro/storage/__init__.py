@@ -8,5 +8,10 @@ the paper's §2.1 analysis and Figures 1-3 are built on.
 """
 from .keycodec import KeyCodecError, decode_key, encode_key
 from .lsm import IoStats, LsmStore
+from .wal import (CrashError, CrashPoint, DurableMedia, RecoveryResult,
+                  WalError)
 
-__all__ = ["encode_key", "decode_key", "KeyCodecError", "LsmStore", "IoStats"]
+__all__ = [
+    "encode_key", "decode_key", "KeyCodecError", "LsmStore", "IoStats",
+    "DurableMedia", "CrashPoint", "CrashError", "RecoveryResult", "WalError",
+]

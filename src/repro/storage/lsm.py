@@ -1,11 +1,21 @@
 """LSM-tree ordered KV store — a faithful-enough leveldb stand-in.
 
-Structure: an in-memory *memtable* (dict) backed by a write-ahead log for
-atomic batches, flushed into immutable sorted *runs* (sstables).  Reads
-consult memtable then runs newest-first; scans merge all levels.  Compaction
-merges runs and applies a caller-supplied ``drop`` predicate — this is the
-hook the paper adds to leveldb so the set-tombstone can discard superseded
-element-keys without ever issuing deletes (§4.3.3).
+Structure: an in-memory *memtable* (dict), flushed into immutable sorted
+*runs* (sstables).  Reads consult memtable then runs newest-first; scans
+merge all levels.  Compaction merges runs and applies a caller-supplied
+``drop`` predicate — this is the hook the paper adds to leveldb so the
+set-tombstone can discard superseded element-keys without ever issuing
+deletes (§4.3.3).
+
+Durability is opt-in: construct with a :class:`~repro.storage.wal.DurableMedia`
+and every batch is framed into an append-only WAL with **group commit** —
+one fsync acknowledges up to ``group_depth`` batches (§4.3's log-before-
+memtable discipline, with leveldb's batched sync amortization).  Flushes
+and compactions publish segment files plus a manifest recording the WAL
+*horizon*; :meth:`LsmStore.recover` rebuilds a crashed store by loading
+the manifested segments and replaying only the WAL records above the
+horizon.  Without media the store is volatile and every WAL path is a
+no-op (zero extra accounting).
 
 Every operation is metered in :class:`IoStats` (bytes read / written /
 transferred), because the paper's central claim is about **bytes read and
@@ -31,18 +41,26 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
+from .wal import (MANIFEST, DurableMedia, RecoveryResult, WalError,
+                  decode_manifest, decode_segment, decode_wal,
+                  encode_manifest, encode_segment, encode_wal_record)
+
 TOMBSTONE = b"\xff\xfe__deleted__"  # storage-level delete marker
 
 
 @dataclass
 class IoStats:
-    bytes_written: int = 0      # WAL + memtable writes (foreground)
+    bytes_written: int = 0      # memtable apply volume (foreground writes)
     bytes_read: int = 0         # get/scan bytes returned + keys touched
     bytes_flushed: int = 0      # memtable -> run
     bytes_compacted: int = 0    # compaction rewrite volume
+    bytes_wal: int = 0          # WAL record bytes appended (durable mode)
+    bytes_recovered: int = 0    # WAL bytes replayed by recover()
     num_writes: int = 0
     num_reads: int = 0
     num_seeks: int = 0
+    num_fsyncs: int = 0         # group commits: one fsync acks many batches
+    num_recoveries: int = 0
 
     def snapshot(self) -> "IoStats":
         return IoStats(**vars(self))
@@ -211,14 +229,32 @@ class LsmIterator:
 
 
 class LsmStore:
-    """Ordered KV store with memtable + sorted runs + pluggable compaction."""
+    """Ordered KV store with memtable + sorted runs + pluggable compaction.
 
-    def __init__(self, memtable_limit: int = 4096, auto_compact_runs: int = 8):
+    Pass ``media`` (a :class:`~repro.storage.wal.DurableMedia`) for a
+    durable store: batches are WAL-framed before the memtable apply and
+    acknowledged by group commit — the fsync fires every ``group_depth``
+    batches, so ``commit_seq`` (the acknowledged horizon) trails ``seq``
+    by at most ``group_depth - 1`` un-fsynced batches.  ``sync()`` forces
+    the pending group commit.  Without media the store is volatile and
+    none of the WAL fields move.
+    """
+
+    def __init__(self, memtable_limit: int = 4096, auto_compact_runs: int = 8,
+                 media: Optional["DurableMedia"] = None, group_depth: int = 1):
         self.memtable: Dict[bytes, bytes] = {}
         self.runs: List[_Run] = []  # newest first
         self.stats = IoStats()
         self.memtable_limit = memtable_limit
         self.auto_compact_runs = auto_compact_runs
+        self.media = media
+        self.group_depth = max(1, group_depth)
+        self._seq = 0              # seq of the latest batch appended
+        self.commit_seq = 0        # highest durable (acknowledged) seq
+        self._pending = 0          # batches appended since the last fsync
+        self._manifest_horizon = 0  # seqs <= this live in durable segments
+        self._next_seg = 0
+        self._seg_names: List[str] = []  # newest first, parallel to runs
         # drop(key, value) -> bool: True to discard during compaction.
         # Set by the bigset layer (the paper's modified-leveldb hook).
         self.compaction_filter: Optional[Callable[[bytes, bytes], bool]] = None
@@ -231,8 +267,24 @@ class LsmStore:
         self._mem_vals: Optional[List[bytes]] = None
 
     # ----------------------------------------------------------------- write
-    def put_batch(self, items: List[Tuple[bytes, bytes]]) -> None:
-        """Atomic write batch (WAL append then memtable apply)."""
+    def put_batch(self, items: List[Tuple[bytes, bytes]]) -> int:
+        """Atomic write batch: WAL append, memtable apply, group commit.
+
+        In durable mode the batch is CRC-framed into the WAL buffer first
+        (billed to ``bytes_wal``), then applied to the memtable; the fsync
+        that *acknowledges* it is deferred until ``group_depth`` batches
+        are pending (or a flush captures them in a durable segment), so
+        fsyncs < batches whenever ``group_depth > 1``.  Returns the batch
+        seq; it is durable once ``commit_seq`` reaches it.  Volatile
+        stores skip every WAL step and acknowledge immediately.
+        """
+        self._seq += 1
+        seq = self._seq
+        if self.media is not None:
+            record = encode_wal_record(seq, items)
+            self.media.wal_append(record)
+            self.stats.bytes_wal += len(record)
+            self._pending += 1
         for k, v in items:
             self.stats.bytes_written += len(k) + len(v)
             self.memtable[k] = v
@@ -240,12 +292,82 @@ class LsmStore:
         self._mem_keys = self._mem_vals = None
         if len(self.memtable) >= self.memtable_limit:
             self.flush()
+        if self.media is None:
+            self.commit_seq = seq
+        elif self._pending >= self.group_depth:
+            self.sync()
+        return seq
+
+    def sync(self) -> None:
+        """Force the pending group commit: one fsync acknowledges every
+        appended batch (``commit_seq`` catches up to the latest seq).
+        A crash point armed at a WAL byte offset fires here, tearing the
+        durable log mid-record."""
+        if self.media is None or self._pending == 0:
+            return
+        self.media.wal_sync()
+        self.stats.num_fsyncs += 1
+        self._pending = 0
+        self.commit_seq = self._seq
 
     def put(self, key: bytes, value: bytes) -> None:
         self.put_batch([(key, value)])
 
     def delete(self, key: bytes) -> None:
         self.put_batch([(key, TOMBSTONE)])
+
+    # ------------------------------------------------------------- recovery
+    def recover(self) -> RecoveryResult:
+        """Rebuild a crashed store from its durable media.
+
+        Loads the manifested segments as runs (newest first), then replays
+        WAL records **above** the manifest horizon into the memtable —
+        records at or below it were already captured by a durable flush
+        (and possibly rewritten by compaction), so replaying them would
+        resurrect discarded element-keys; they are counted as skipped and
+        their bytes are never re-billed.  A torn final record (mid-fsync
+        crash) is discarded by CRC framing.  Restores exactly the
+        acknowledged prefix: every batch with ``seq <= commit_seq`` at
+        crash time, nothing beyond the durable WAL.
+
+        Only valid on a freshly-constructed store holding the media.
+        """
+        if self.media is None:
+            raise WalError("recover() requires durable media")
+        if self.memtable or self.runs or self._seq:
+            raise WalError("recover() on a store that already has state")
+        segments, horizon, next_seg = decode_manifest(
+            self.media.read_file(MANIFEST))
+        for name in segments:  # manifest order is newest-first, like runs
+            data = self.media.read_file(name)
+            if data is None:
+                raise WalError(f"manifest references missing segment {name}")
+            self.runs.append(_Run(decode_segment(data)))
+        self._seg_names = list(segments)
+        self._manifest_horizon = horizon
+        self._next_seg = next_seg
+        records, torn_bytes = decode_wal(bytes(self.media.wal))
+        replayed = skipped = nbytes = 0
+        last_seq = horizon
+        for rec in records:
+            last_seq = max(last_seq, rec.seq)
+            if rec.seq <= horizon:
+                skipped += 1
+                continue
+            for k, v in rec.items:
+                self.memtable[k] = v
+            replayed += 1
+            nbytes += rec.nbytes
+        self._mem_keys = self._mem_vals = None
+        self._seq = last_seq        # continue batch numbering monotonically
+        self.commit_seq = last_seq  # everything restored is durable
+        self._pending = 0
+        self.stats.bytes_recovered += nbytes
+        self.stats.num_recoveries += 1
+        return RecoveryResult(
+            segments=len(segments), batches_replayed=replayed,
+            batches_skipped=skipped, bytes_replayed=nbytes,
+            torn_bytes=torn_bytes, horizon=horizon, last_seq=last_seq)
 
     # ------------------------------------------------------------------ read
     def get(self, key: bytes) -> Optional[bytes]:
@@ -338,8 +460,31 @@ class LsmStore:
         self.runs.insert(0, _Run(items))
         self.memtable = {}
         self._mem_keys = self._mem_vals = None
+        if self.media is not None:
+            # Publish the run as a durable segment and advance the manifest
+            # horizon to the last captured batch: those batches are now
+            # durable without their WAL fsync, and the unsynced WAL tail
+            # (all <= horizon) is redundant.  A crash between the two
+            # publishes leaves the old manifest pointing at the old
+            # segments + durable WAL — still exactly the acknowledged
+            # prefix.
+            name = f"seg-{self._next_seg:08d}"
+            self._next_seg += 1
+            self._manifest_horizon = self._seq
+            self.media.write_file(name, encode_segment(items))
+            self._seg_names.insert(0, name)
+            self._publish_manifest()
+            self.media.wal_drop_buffer()
+            self._pending = 0
+            self.commit_seq = self._seq
         if len(self.runs) >= self.auto_compact_runs and not self._compacting:
             self.compact()
+
+    def _publish_manifest(self) -> None:
+        self.media.write_file(
+            MANIFEST,
+            encode_manifest(self._seg_names, self._manifest_horizon,
+                            self._next_seg))
 
     def compact(self) -> List[Tuple[bytes, bytes]]:
         """Merge all levels into one run, applying the compaction filter.
@@ -378,6 +523,29 @@ class LsmStore:
         merged.sort()
         self.stats.bytes_compacted += sum(len(k) + len(v) for k, v in merged)
         self.runs = [_Run(merged)] if merged else []
+        if self.media is not None:
+            # One merged segment replaces every prior one, then the WAL is
+            # atomically emptied: records <= horizon must never replay
+            # after the filter discarded their keys (the set-tombstone
+            # already shrank past those dots).  Crash ordering is safe at
+            # every publish: before the manifest lands the old
+            # segments+WAL are authoritative; after it, the merged
+            # segment is, and stale WAL records fall at or below the new
+            # horizon so recovery skips them.
+            stale = self._seg_names
+            self._seg_names = []
+            self._manifest_horizon = self._seq
+            if merged:
+                name = f"seg-{self._next_seg:08d}"
+                self._next_seg += 1
+                self.media.write_file(name, encode_segment(merged))
+                self._seg_names = [name]
+            self._publish_manifest()
+            self.media.wal_reset()
+            self._pending = 0
+            self.commit_seq = self._seq
+            for name in stale:
+                self.media.delete_file(name)
         return discarded
 
     # ------------------------------------------------------------- inspection

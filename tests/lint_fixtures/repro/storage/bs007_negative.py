@@ -1,0 +1,27 @@
+"""BS007 negative: mutations confined to the WAL-billed entry points."""
+
+
+class WalStore:
+    def __init__(self):
+        self.memtable = {}
+        self.wal = []
+
+    def put_batch(self, items):
+        for key, value in items:
+            self.wal.append((key, value))
+            self.memtable[key] = value
+
+    def flush(self):
+        run = sorted(self.memtable.items())
+        self.memtable = {}
+        return run
+
+    def recover(self, records):
+        for key, value in records:
+            self.memtable[key] = value
+
+    def lookup(self, key):
+        return self.memtable.get(key)
+
+    def entries(self):
+        return self.memtable.items()

@@ -1,0 +1,21 @@
+"""BS007 positive: memtable mutations outside the WAL-billed write path."""
+
+
+class LeakyStore:
+    def __init__(self):
+        self.memtable = {}
+
+    def sneak_write(self, key, value):
+        self.memtable[key] = value
+
+    def evict(self, key):
+        self.memtable.pop(key, None)
+
+    def reset(self):
+        self.memtable = {}
+
+    def merge_in(self, other):
+        self.memtable.update(other)
+
+    def forget(self, key):
+        del self.memtable[key]

@@ -1,0 +1,9 @@
+"""BS007 suppressed: a justified escape hatch for crash-test backdoors."""
+
+
+class BackdoorStore:
+    def __init__(self):
+        self.memtable = {}
+
+    def drop_unlogged(self, key):
+        self.memtable.pop(key, None)  # bigset-lint: disable=BS007 -- models losing un-WALed state in crash tests

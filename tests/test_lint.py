@@ -1,7 +1,8 @@
 """bigset-lint: golden fixture runs per rule, engine semantics, self-check.
 
 The fixture tree under ``tests/lint_fixtures/repro/`` mirrors the package
-layout (``core/``, ``cluster/``, ``query/``, ``kernels/``, ``testing/``)
+layout (``core/``, ``cluster/``, ``query/``, ``storage/``, ``kernels/``,
+``testing/``)
 so the *shipped* config — with its real layer scoping — is what the
 golden tests exercise: every rule has a positive, a negative, a
 suppressed, and (via BS000) an unused-/malformed-suppression case.
@@ -58,6 +59,12 @@ GOLDEN = {
     "repro/kernels/demo/kernel.py": [("BS006", 6), ("BS006", 9)],
     "repro/kernels/demo/ref.py": [],
     "repro/kernels/clean/kernel.py": [],
+    "repro/storage/bs007_positive.py": [
+        ("BS007", 9), ("BS007", 12), ("BS007", 15), ("BS007", 18),
+        ("BS007", 21),
+    ],
+    "repro/storage/bs007_negative.py": [],
+    "repro/storage/bs007_suppressed.py": [],
 }
 
 
@@ -84,12 +91,13 @@ class TestGoldenFixtures:
 
     def test_suppressions_counted(self, fixture_result):
         # bs001_suppressed + bs002_suppressed + bs004_suppressed
+        # + bs007_suppressed
         # + the justification-less (still applied) one in bs000_bad_*
-        assert fixture_result.suppressed == 4
+        assert fixture_result.suppressed == 5
 
-    def test_all_six_rules_ran(self, fixture_result):
+    def test_all_rules_ran(self, fixture_result):
         assert fixture_result.rules == (
-            "BS001", "BS002", "BS003", "BS004", "BS005", "BS006")
+            "BS001", "BS002", "BS003", "BS004", "BS005", "BS006", "BS007")
         assert set(RULES) == set(fixture_result.rules)
 
 
@@ -174,7 +182,7 @@ class TestCli:
         assert lint_main([str(FIXTURES), "--json-out", str(out)]) == 1
         doc = json.loads(out.read_text())
         assert doc["version"] == 1 and doc["ok"] is False
-        assert len(doc["findings"]) == 24
+        assert len(doc["findings"]) == 29
         assert doc["rules"] == list(RULES)
         assert lint_main([str(SRC)]) == 0
         assert lint_main(["--list-rules"]) == 0

@@ -1,0 +1,207 @@
+"""Clock representation benchmark: interval runs vs the legacy per-dot cloud.
+
+The paper's bound is that clock cost tracks *causal metadata*.  The legacy
+``frozenset``-cloud representation broke that on churn: one removal below
+the base fragments the survivors digest permanently, so wire bytes and
+digest-compare cost grow with *removed dots*.  Interval runs restore the
+bound — cost grows with live *runs*.
+
+Rows, per churn fraction, on an ``n``-element single-actor set with
+span-granular random removals (spans of ~64 contiguous dots — element
+churn is bursty, not uniform):
+
+* ``wire/...`` — serialized survivors-digest bytes: the run-length codec
+  (``Clock.to_obj``) vs the legacy per-dot ``{"b", "c"}`` msgpack codec
+  of the *same* dot set.
+* ``diff/...`` — digest subtraction between two replicas diverged by
+  ``k`` spans: ``diff_runs`` (O(runs)) vs the legacy set-of-dots
+  difference (O(events)).
+* ``sync/converged_churned`` — a churned, converged vnode pair still
+  syncs with **zero element folds** (digest-only round).
+
+**Gate** (acceptance): at n=100k / 50% churn the interval representation
+must beat legacy by ≥ 10× on both wire bytes and diff cost, and the
+converged round must fold no element ranges.  The gate raises, failing
+the quick-bench job, rather than silently reporting a regression.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, FrozenSet, List, Set, Tuple
+
+import msgpack
+
+from repro.cluster.antientropy import sync_pull
+from repro.core.bigset import BigsetVnode
+from repro.core.clock import Clock
+from repro.storage.lsm import LsmStore
+
+S = b"churnset"
+SPAN = 64          # contiguous dots per removal burst
+GATE = 10.0        # required interval-vs-legacy advantage at 50% churn
+
+
+# ----------------------------------------------------------------- legacy model
+class LegacyCloudClock:
+    """The pre-refactor representation: BaseVV + per-actor frozenset cloud.
+
+    Enough of the old surface to price its wire bytes and diff cost
+    honestly: the base compresses only the contiguous prefix, every dot
+    above the first hole is a cloud member.
+    """
+
+    def __init__(self, dots_by_actor: Dict[str, Set[int]]):
+        self.base: Dict[str, int] = {}
+        self.cloud: Dict[str, FrozenSet[int]] = {}
+        for a, cs in dots_by_actor.items():
+            b = 0
+            while (b + 1) in cs:
+                b += 1
+            if b:
+                self.base[a] = b
+            rest = frozenset(c for c in cs if c > b)
+            if rest:
+                self.cloud[a] = rest
+
+    def to_bytes(self) -> bytes:
+        return msgpack.packb({
+            "b": sorted(self.base.items()),
+            "c": sorted((a, sorted(s)) for a, s in self.cloud.items()),
+        })
+
+    def dot_set(self) -> Set[Tuple[str, int]]:
+        out = {(a, c) for a in self.base for c in range(1, self.base[a] + 1)}
+        for a, s in self.cloud.items():
+            out.update((a, c) for c in s)
+        return out
+
+
+# ------------------------------------------------------------------- churn model
+def churned_counters(n: int, frac: float, seed: int) -> Tuple[Set[int], int]:
+    """Live counters of ``[1, n]`` after removing ``frac`` in SPAN-bursts."""
+    import random
+
+    rng = random.Random(seed)
+    n_spans = int(n * frac) // SPAN
+    slots = rng.sample(range(n // SPAN), n_spans)
+    removed: Set[int] = set()
+    for s in slots:
+        removed.update(range(s * SPAN + 1, (s + 1) * SPAN + 1))
+    return set(range(1, n + 1)) - removed, n_spans
+
+
+def _runs_of(live: Set[int]) -> List[Tuple[str, int, int]]:
+    out = []
+    lo = prev = None
+    for c in sorted(live):
+        if prev is None or c != prev + 1:
+            if prev is not None:
+                out.append(("x", lo, prev))
+            lo = c
+        prev = c
+    if prev is not None:
+        out.append(("x", lo, prev))
+    return out
+
+
+def build_clock(live: Set[int]) -> Clock:
+    return Clock.zero().add_runs(_runs_of(live))
+
+
+# ------------------------------------------------------------------------ bench
+def main(quick: bool = False) -> List[str]:
+    n = 100_000
+    fracs = (0.1, 0.5) if quick else (0.1, 0.25, 0.5)
+    reps = 3 if quick else 10
+    rows: List[str] = []
+    gates: Dict[str, float] = {}
+
+    for frac in fracs:
+        live, n_spans = churned_counters(n, frac, seed=7)
+        clk = build_clock(live)
+        legacy = LegacyCloudClock({"x": live})
+        tag = f"churn{int(frac * 100)}"
+
+        # ------------------------------------------------------- wire bytes
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            iv_bytes = len(msgpack.packb(clk.to_obj()))
+        iv_us = (time.perf_counter() - t0) / reps * 1e6
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            lg_bytes = len(legacy.to_bytes())
+        lg_us = (time.perf_counter() - t0) / reps * 1e6
+        rows.append(f"clock/wire/{tag}/interval,{iv_us:.1f},"
+                    f"bytes={iv_bytes};runs={clk.n_runs()}")
+        rows.append(f"clock/wire/{tag}/legacy,{lg_us:.1f},"
+                    f"bytes={lg_bytes};cloud_dots="
+                    f"{sum(len(s) for s in legacy.cloud.values())}")
+
+        # -------------------------------------------- diff (digest compare)
+        # replica B lags by the last ~1/8 of the removal spans healed back
+        live_b, _ = churned_counters(n, frac, seed=7)
+        for a, lo, hi in _runs_of(set(range(1, n + 1)) - live_b)[
+                : max(1, n_spans // 8)]:
+            live_b.update(range(lo, hi + 1))
+        clk_b = build_clock(live_b)
+        legacy_b = LegacyCloudClock({"x": live_b})
+
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            diff_runs = clk_b.diff_runs(clk)
+        iv_diff_us = (time.perf_counter() - t0) / reps * 1e6
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            diff_legacy = legacy_b.dot_set() - legacy.dot_set()
+        lg_diff_us = (time.perf_counter() - t0) / reps * 1e6
+        diverged = sum(hi - lo + 1 for _, lo, hi in diff_runs)
+        assert diverged == len(diff_legacy)  # same answer, different cost
+        rows.append(f"clock/diff/{tag}/interval,{iv_diff_us:.1f},"
+                    f"diverged_runs={len(diff_runs)};diverged_dots={diverged}")
+        rows.append(f"clock/diff/{tag}/legacy,{lg_diff_us:.1f},"
+                    f"diverged_dots={len(diff_legacy)}")
+
+        if frac == 0.5:
+            gates["wire_bytes"] = lg_bytes / iv_bytes
+            gates["diff_cost"] = lg_diff_us / max(iv_diff_us, 1e-9)
+
+    # ------------------------------------- churned converged pair still skips
+    m = 1_000 if quick else 10_000
+    a = BigsetVnode("a", LsmStore(memtable_limit=1 << 20))
+    b = BigsetVnode("b", LsmStore(memtable_limit=1 << 20))
+    for i in range(m):
+        b.replica_insert(a.coordinate_insert(S, b"%08d" % i))
+    for i in range(0, m, 2):                      # 50% removals
+        _, ctx = a.is_member(S, b"%08d" % i)
+        b.replica_remove(a.coordinate_remove(S, ctx))
+    a.store.flush()
+    b.store.flush()
+    sync_pull(a, b, S)                            # settle buffered digests
+    sync_pull(b, a, S)
+    folds0 = a.store.stats.num_seeks + b.store.stats.num_seeks
+    t0 = time.perf_counter()
+    r1 = sync_pull(a, b, S)
+    r2 = sync_pull(b, a, S)
+    us = (time.perf_counter() - t0) * 1e6
+    folds = a.store.stats.num_seeks + b.store.stats.num_seeks - folds0
+    rows.append(f"clock/sync/converged_churned/n{m},{us:.1f},"
+                f"element_folds={folds};skipped={r1.skipped and r2.skipped};"
+                f"digest_bytes={r1.digest_bytes() + r2.digest_bytes()}")
+
+    # ------------------------------------------------------------------ gates
+    for name, ratio in gates.items():
+        rows.append(f"clock/gate/{name},0,ratio={ratio:.1f}x")
+        if ratio < GATE:
+            raise RuntimeError(
+                f"interval clock {name} advantage {ratio:.1f}x < {GATE}x "
+                f"gate at n={n} churn=50%")
+    if folds != 0 or not (r1.skipped and r2.skipped):
+        raise RuntimeError(
+            f"churned converged pair folded element ranges "
+            f"(folds={folds}, skipped={r1.skipped and r2.skipped})")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

@@ -39,7 +39,7 @@ class LintConfig:
     #: type -> fields that only ``mutation_home`` may attribute-assign
     protected_fields: Mapping[str, Tuple[str, ...]] = field(
         default_factory=lambda: {
-            "Clock": ("base", "cloud"),
+            "Clock": ("base", "cloud", "runs"),
             "SetDigest": ("bucket_limit", "fences", "buckets", "counts",
                           "limits", "_total", "_pend_add", "_pend_sub",
                           "_surv"),
@@ -74,6 +74,14 @@ class LintConfig:
     #: else would apply state a crash could not replay
     memtable_entrypoints: FrozenSet[str] = frozenset(
         {"__init__", "put_batch", "flush", "recover"})
+
+    # ----------------------------------------------------------- BS008 scope
+    #: Clock members that materialise the raw per-dot cloud; outside
+    #: ``mutation_home`` only the run-granular surface is sanctioned
+    dot_enumeration_fields: FrozenSet[str] = frozenset({"cloud"})
+    #: Clock methods that enumerate every dot (``diff_dots`` stays allowed:
+    #: it materialises only the actual divergence)
+    dot_enumeration_calls: FrozenSet[str] = frozenset({"all_dots"})
 
     # ------------------------------------------------------------------ misc
     def runs(self, rule_id: str) -> bool:

@@ -172,14 +172,14 @@ def apply_digest_reply(vnode: BigsetVnode, reply: DigestReply) -> int:
             written += 1
     # removal inference by digest subtraction: surviving here, seen but not
     # surviving at the peer -> the peer removed it (no fold, no tombstone
-    # exchange; safe even after the peer compacted the removal away)
+    # exchange; safe even after the peer compacted the removal away).
+    # Pure run merges: (mine \ peer-survivors) ∩ peer-clock, O(runs).
     mine = survivors_digest(vnode, set_name)
-    removed = [d for d in mine.diff_dots(reply.survivors)
-               if reply.clock.seen(d)]
+    removed = mine.subtract_clock(reply.survivors).intersect(reply.clock)
     sc0 = vnode.read_clock(set_name)
     sc = sc0.join(reply.clock)
     ts0 = vnode.read_tombstone(set_name)
-    ts = ts0.add_dots(removed)
+    ts = ts0.add_runs(removed.iter_runs())
     if sc != sc0 or ts is not ts0:
         from ..core.bigset import clock_key, tombstone_key, _clock_to_bytes
 
@@ -271,23 +271,25 @@ def trim_tombstone(vnode: BigsetVnode, set_name: bytes,
 
     ``backed`` (the dots known to have physical keys) can be handed in by
     a caller that just folded; otherwise backing comes from the vnode's
-    maintained raw digest — O(tombstone), no scan either way.
+    maintained raw digest.  Either way the trim is a run intersection —
+    O(tombstone runs), no scan, no per-dot enumeration.
+
+    Returns the number of tombstone *events* trimmed.
     """
     ts = vnode.read_tombstone(set_name)
     if ts.is_zero():
         return 0
     if backed is None:
-        raw = vnode._digest(set_name).raw_total()
-        unbacked = [d for d in ts.all_dots() if not raw.seen(d)]
+        backing = vnode._digest(set_name).raw_total()
     else:
-        unbacked = [d for d in ts.all_dots() if d not in backed]
-    if not unbacked:
+        backing = Clock.zero().add_dots(backed)
+    trimmed = ts.intersect(backing)
+    if trimmed == ts:
         return 0
-    ts = ts.subtract(unbacked)
     from ..core.bigset import tombstone_key, _clock_to_bytes
 
-    vnode.store.put(tombstone_key(set_name), _clock_to_bytes(ts))
-    return len(unbacked)
+    vnode.store.put(tombstone_key(set_name), _clock_to_bytes(trimmed))
+    return ts.n_events() - trimmed.n_events()
 
 
 def full_sync(a: BigsetVnode, b: BigsetVnode, set_name: bytes) -> None:

@@ -86,24 +86,21 @@ class TracedPayload:
 
 # --------------------------------------------------------------- orswot codec
 def orswot_to_bytes(s: Orswot) -> bytes:
-    return msgpack.packb(
-        {
-            "b": sorted(s.clock.base.items()),
-            "c": sorted((a, sorted(x)) for a, x in s.clock.cloud.items()),
-            "e": sorted(
-                (e, sorted((d.actor, d.counter) for d in ds))
-                for e, ds in s.entries.items()
-            ),
-        }
+    """Run-length orswot codec: the clock ships as interval runs."""
+    obj = s.clock.to_obj()
+    obj["e"] = sorted(
+        (e, sorted((d.actor, d.counter) for d in ds))
+        for e, ds in s.entries.items()
     )
+    return msgpack.packb(obj)
 
 
 def orswot_from_bytes(b: Optional[bytes]) -> Orswot:
+    """Decode an orswot blob — run-length or legacy per-dot clock form."""
     if b is None:
         return Orswot.new()
     o = msgpack.unpackb(b, strict_map_key=False)
-    clock = Clock({a: n for a, n in o["b"]}, {a: frozenset(s) for a, s in o["c"]},
-                  _normalise=False)
+    clock = Clock.from_obj(o)
     entries = {
         e: frozenset(Dot(a, c) for a, c in ds) for e, ds in o["e"]
     }

@@ -40,23 +40,24 @@ from .orswot import Orswot
 
 # ------------------------------------------------------------------ codecs
 def _clock_to_bytes(c: Clock) -> bytes:
-    return msgpack.packb(
-        {
-            "b": sorted(c.base.items()),
-            "c": sorted((a, sorted(s)) for a, s in c.cloud.items()),
-        }
-    )
+    """Run-length clock codec: ``{"b": base VV, "r": interval runs}``.
+
+    O(runs) on the wire regardless of how many events each run spans.
+    """
+    return msgpack.packb(c.to_obj())
 
 
 def _clock_from_bytes(b: Optional[bytes]) -> Clock:
+    """Decode a ``KIND_CLOCK``/``KIND_TOMBSTONE`` payload.
+
+    Accepts both the run-length codec and the legacy per-dot ``{"b", "c"}``
+    cloud form, so records written before the interval refactor (including
+    WAL-replayed state) still decode and round-trip through recovery.
+    """
     if b is None:
         return Clock.zero()
     o = msgpack.unpackb(b, strict_map_key=False)
-    return Clock(
-        {a: n for a, n in o["b"]},
-        {a: frozenset(s) for a, s in o["c"]},
-        _normalise=False,
-    )
+    return Clock.from_obj(o)
 
 
 def clock_key(set_name: bytes) -> bytes:
@@ -327,12 +328,11 @@ class SetDigest:
     def survivors(self, tombstone: Clock) -> Clock:
         """Digest of *visible* element-key dots: raw minus ts-covered.
 
-        The subtraction enumerates the tombstone's events, so it costs
-        O(pending removals) — but only when the state actually changed:
-        the result is cached against (raw identity, tombstone equality),
-        and anti-entropy reads this several times per round per set, all
-        between state changes.  Compaction keeps the tombstone small
-        (the paper's §4.3.3 invariant), bounding the uncached case.
+        An O(runs) run-difference (:meth:`Clock.subtract_clock`) — never a
+        per-dot enumeration.  Computed only when the state actually
+        changed: the result is cached against (raw identity, tombstone
+        equality), and anti-entropy reads this several times per round per
+        set, all between state changes.
         """
         raw = self.raw_total()
         if tombstone.is_zero():
@@ -340,8 +340,7 @@ class SetDigest:
         cached = self._surv
         if cached is not None and cached[0] is raw and cached[1] == tombstone:
             return cached[2]
-        covered = [d for d in tombstone.all_dots() if raw.seen(d)]
-        out = raw.subtract(covered) if covered else raw
+        out = raw.subtract_clock(tombstone)
         self._surv = (raw, tombstone, out)
         return out
 
@@ -817,10 +816,9 @@ class BigsetVnode:
             # skips its trim when a reply leaves the tombstone unchanged
             dig = self._digests.get(set_name)
             if dig is not None and not ts.is_zero():
-                raw = dig.raw_total()
-                unbacked = [d for d in ts.all_dots() if not raw.seen(d)]
-                if unbacked:
-                    ts = ts.subtract(unbacked)
+                # O(runs) run-intersection: keep only removals the raw
+                # total actually covers
+                ts = ts.intersect(dig.raw_total())
             if ts is not ts0:
                 batch.append((tombstone_key(set_name), _clock_to_bytes(ts)))
         if batch:

@@ -2,7 +2,8 @@
 
 Paper-technique kernels (the bigset causal-metadata plane):
 * ``dot_seen``    - batched dot-membership filter (read fold / delta dedup)
-* ``clock_ops``   - clock-lattice join / subtract / popcount bitmaps
+* ``clock_ops``   - clock-lattice join / subtract / intersect / popcount
+  over dense (actor, lo, hi) interval-run arrays
 
 Model-plane kernels (the assigned-architecture hot spots):
 * ``flash_attention``  - blocked prefill attention (causal/SWA, GQA)

@@ -1,3 +1,3 @@
-from .ops import join, popcount, subtract
+from .ops import intersect, join, popcount, subtract
 
-__all__ = ["join", "subtract", "popcount"]
+__all__ = ["join", "subtract", "intersect", "popcount"]

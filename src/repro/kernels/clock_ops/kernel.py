@@ -1,9 +1,18 @@
-"""Pallas TPU kernels for clock-lattice bitwise ops.
+"""Pallas TPU kernels for interval clock-lattice ops.
 
-Pure VPU work: OR / AND-NOT / popcount over ``uint32[A, W]`` bitmap tiles.
-Tiled (block_a × block_w) so arbitrarily large actor universes / windows
-stream through VMEM; for the framework's clocks (A ≤ 512 hosts, W ≤ 2048
-words ≈ 64k events) a single tile suffices.
+Pure VPU work: the boundary-sweep run merge (union / difference /
+intersection) and run-length popcount over ``int32[A, R]`` run arrays.
+A counter is *live* under the op's predicate over (in-A, in-B); output runs
+start at live points whose predecessor is dead and end at live points whose
+successor is dead.  All candidate boundaries are input run edges, so each
+actor row is a fixed-shape O(P²) broadcast compare with P = Ra + Rb —
+branch-free and layout-friendly.
+
+Tiled over actor blocks so arbitrarily large actor universes stream through
+VMEM; the run axis stays whole per block (clocks are causal-metadata-sized).
+For the framework's clocks (A ≤ 512 hosts, R ≤ 1024 runs) a few tiles
+suffice: per block (BA=8, P=2048) the [BA, P, P] live masks are ~32 MiB of
+bool compares streamed by the VPU, with [BA, P] outputs.
 """
 from __future__ import annotations
 
@@ -13,22 +22,64 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-
-def _join_kernel(a_ref, b_ref, o_ref):
-    o_ref[...] = a_ref[...] | b_ref[...]
+_INT32_MAX = 2**31 - 1
 
 
-def _subtract_kernel(a_ref, b_ref, o_ref):
-    o_ref[...] = a_ref[...] & ~b_ref[...]
+def _contains(s, e, x):
+    """bool[BA, P] — is x[i, p] inside any (s, e)[i, :] run?"""
+    return jnp.any(
+        (s[:, None, :] <= x[:, :, None]) & (x[:, :, None] <= e[:, None, :]),
+        axis=-1,
+    )
 
 
-def _popcount_kernel(a_ref, o_ref):
-    x = a_ref[...]
-    x = x - ((x >> jnp.uint32(1)) & jnp.uint32(0x55555555))
-    x = (x & jnp.uint32(0x33333333)) + ((x >> jnp.uint32(2)) & jnp.uint32(0x33333333))
-    x = (x + (x >> jnp.uint32(4))) & jnp.uint32(0x0F0F0F0F)
-    x = (x * jnp.uint32(0x01010101)) >> jnp.uint32(24)
-    o_ref[...] += x.astype(jnp.int32).sum(axis=-1)
+def _merge_kernel(a_s_ref, a_e_ref, b_s_ref, b_e_ref, o_s_ref, o_e_ref,
+                  *, mode: str):
+    a_s, a_e = a_s_ref[...], a_e_ref[...]               # int32[BA, Ra]
+    b_s, b_e = b_s_ref[...], b_e_ref[...]               # int32[BA, Rb]
+    a_valid = a_s <= a_e
+    b_valid = b_s <= b_e
+
+    if mode == "or":
+        def live(x):
+            return _contains(a_s, a_e, x) | _contains(b_s, b_e, x)
+        cand_s = jnp.concatenate([a_s, b_s], axis=1)
+        cand_e = jnp.concatenate([a_e, b_e], axis=1)
+    elif mode == "andnot":
+        def live(x):
+            return _contains(a_s, a_e, x) & ~_contains(b_s, b_e, x)
+        cand_s = jnp.concatenate([a_s, b_e + 1], axis=1)
+        cand_e = jnp.concatenate([a_e, b_s - 1], axis=1)
+    else:  # "and"
+        def live(x):
+            return _contains(a_s, a_e, x) & _contains(b_s, b_e, x)
+        cand_s = jnp.concatenate([a_s, b_s], axis=1)
+        cand_e = jnp.concatenate([a_e, b_e], axis=1)
+    valid = jnp.concatenate([a_valid, b_valid], axis=1)
+
+    is_start = valid & live(cand_s) & ~live(cand_s - 1)
+    # drop duplicate start values (identical runs in both inputs): keep the
+    # first occurrence per row, via a lower-triangular "earlier" mask
+    p = cand_s.shape[1]
+    row = jax.lax.broadcasted_iota(jnp.int32, (p, p), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (p, p), 1)
+    earlier = col < row                                  # [P, P] q < p
+    same = cand_s[:, :, None] == cand_s[:, None, :]      # [BA, P, P]
+    dup = jnp.any(same & earlier[None, :, :] & is_start[:, None, :], axis=-1)
+    is_start = is_start & ~dup
+
+    is_end = valid & live(cand_e) & ~live(cand_e + 1)
+    # each output run ends at the smallest end boundary >= its start
+    reach = is_end[:, None, :] & (cand_e[:, None, :] >= cand_s[:, :, None])
+    ends_for = jnp.min(
+        jnp.where(reach, cand_e[:, None, :], _INT32_MAX), axis=-1)
+
+    o_s_ref[...] = jnp.where(is_start, cand_s, 1).astype(jnp.int32)
+    o_e_ref[...] = jnp.where(is_start, ends_for, 0).astype(jnp.int32)
+
+
+def _popcount_kernel(s_ref, e_ref, o_ref):
+    o_ref[...] = jnp.maximum(e_ref[...] - s_ref[...] + 1, 0).sum(axis=-1)
 
 
 def _tiles(n: int, b: int) -> int:
@@ -36,51 +87,61 @@ def _tiles(n: int, b: int) -> int:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("kernel", "block_a", "block_w", "interpret"))
-def _binary_op(kernel, a: jax.Array, b: jax.Array, *, block_a: int = 8,
-               block_w: int = 512, interpret: bool = True) -> jax.Array:
-    A, W = a.shape
-    ba, bw = min(block_a, A), min(block_w, W)
-    grid = (_tiles(A, ba), _tiles(W, bw))
+                   static_argnames=("mode", "block_a", "interpret"))
+def _merge_op(mode, a_s, a_e, b_s, b_e, *, block_a: int = 8,
+              interpret: bool = True):
+    A, ra = a_s.shape
+    rb = b_s.shape[1]
+    ba = min(block_a, A)
+    grid = (_tiles(A, ba),)
+    p = ra + rb
     return pl.pallas_call(
-        kernel,
+        functools.partial(_merge_kernel, mode=mode),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((ba, bw), lambda i, j: (i, j)),
-            pl.BlockSpec((ba, bw), lambda i, j: (i, j)),
+            pl.BlockSpec((ba, ra), lambda i: (i, 0)),
+            pl.BlockSpec((ba, ra), lambda i: (i, 0)),
+            pl.BlockSpec((ba, rb), lambda i: (i, 0)),
+            pl.BlockSpec((ba, rb), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((ba, bw), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((A, W), jnp.uint32),
+        out_specs=[
+            pl.BlockSpec((ba, p), lambda i: (i, 0)),
+            pl.BlockSpec((ba, p), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((A, p), jnp.int32),
+            jax.ShapeDtypeStruct((A, p), jnp.int32),
+        ],
         interpret=interpret,
-    )(a, b)
+    )(a_s, a_e, b_s, b_e)
 
 
-def join_pallas(a, b, **kw):
-    return _binary_op(_join_kernel, a, b, **kw)
+def join_pallas(a_s, a_e, b_s, b_e, **kw):
+    return _merge_op("or", a_s, a_e, b_s, b_e, **kw)
 
 
-def subtract_pallas(a, b, **kw):
-    return _binary_op(_subtract_kernel, a, b, **kw)
+def subtract_pallas(a_s, a_e, b_s, b_e, **kw):
+    return _merge_op("andnot", a_s, a_e, b_s, b_e, **kw)
 
 
-@functools.partial(jax.jit, static_argnames=("block_a", "block_w", "interpret"))
-def popcount_pallas(a: jax.Array, *, block_a: int = 8, block_w: int = 512,
+def intersect_pallas(a_s, a_e, b_s, b_e, **kw):
+    return _merge_op("and", a_s, a_e, b_s, b_e, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("block_a", "interpret"))
+def popcount_pallas(starts: jax.Array, ends: jax.Array, *, block_a: int = 8,
                     interpret: bool = True) -> jax.Array:
-    A, W = a.shape
-    ba, bw = min(block_a, A), min(block_w, W)
-
-    def kernel(a_ref, o_ref):
-        @pl.when(pl.program_id(1) == 0)
-        def _init():
-            o_ref[...] = jnp.zeros_like(o_ref)
-        _popcount_kernel(a_ref, o_ref)
-
-    grid = (_tiles(A, ba), _tiles(W, bw))
+    A, r = starts.shape
+    ba = min(block_a, A)
+    grid = (_tiles(A, ba),)
     return pl.pallas_call(
-        kernel,
+        _popcount_kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((ba, bw), lambda i, j: (i, j))],
-        out_specs=pl.BlockSpec((ba,), lambda i, j: (i,)),
+        in_specs=[
+            pl.BlockSpec((ba, r), lambda i: (i, 0)),
+            pl.BlockSpec((ba, r), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ba,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((A,), jnp.int32),
         interpret=interpret,
-    )(a)
+    )(starts, ends)

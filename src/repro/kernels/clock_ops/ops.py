@@ -1,9 +1,17 @@
-"""Jit'd wrappers for clock-lattice ops with pallas/ref dispatch."""
+"""Jit'd wrappers for interval clock-lattice ops with pallas/ref dispatch.
+
+Join / subtract / intersect are boundary-sweep run merges over the dense
+``(lo, hi)`` run arrays of :class:`repro.core.vclock.DenseClock`; both
+dispatch paths return the merged-but-unsorted run arrays, and the wrapper
+canonicalises row order (sorted by start, empty ``(1, 0)`` slots last) so
+ref and Pallas agree bit-for-bit.  Subtract is origin-free: there is no
+alignment precondition beyond a shared actor universe.
+"""
 from __future__ import annotations
 
 import jax
 
-from ...core.vclock import DenseClock
+from ...core.vclock import DenseClock, sort_runs
 from . import kernel as K
 from . import ref as R
 
@@ -20,21 +28,33 @@ def _dispatch(pallas_fn, ref_fn, use_pallas: bool, interpret: bool | None):
     return run
 
 
+def _merged(pallas_fn, ref_fn, a: DenseClock, b: DenseClock,
+            use_pallas: bool, interpret: bool | None) -> DenseClock:
+    if a.starts.shape[0] != b.starts.shape[0]:
+        raise ValueError("dense clocks must share the actor universe")
+    s, e = _dispatch(pallas_fn, ref_fn, use_pallas, interpret)(
+        a.starts, a.ends, b.starts, b.ends)
+    return DenseClock(*sort_runs(s, e))
+
+
 def join(a: DenseClock, b: DenseClock, *, use_pallas: bool = False,
          interpret: bool | None = None) -> DenseClock:
-    import jax.numpy as jnp
-
-    bits = _dispatch(K.join_pallas, R.join_ref, use_pallas, interpret)(a.bits, b.bits)
-    return DenseClock(jnp.maximum(a.origin, b.origin), bits)
+    return _merged(K.join_pallas, R.join_ref, a, b, use_pallas, interpret)
 
 
 def subtract(a: DenseClock, b: DenseClock, *, use_pallas: bool = False,
              interpret: bool | None = None) -> DenseClock:
-    bits = _dispatch(K.subtract_pallas, R.subtract_ref, use_pallas, interpret)(
-        a.bits, b.bits)
-    return DenseClock(a.origin, bits)
+    return _merged(K.subtract_pallas, R.subtract_ref, a, b,
+                   use_pallas, interpret)
+
+
+def intersect(a: DenseClock, b: DenseClock, *, use_pallas: bool = False,
+              interpret: bool | None = None) -> DenseClock:
+    return _merged(K.intersect_pallas, R.intersect_ref, a, b,
+                   use_pallas, interpret)
 
 
 def popcount(a: DenseClock, *, use_pallas: bool = False,
              interpret: bool | None = None) -> jax.Array:
-    return _dispatch(K.popcount_pallas, R.popcount_ref, use_pallas, interpret)(a.bits)
+    return _dispatch(K.popcount_pallas, R.popcount_ref, use_pallas, interpret)(
+        a.starts, a.ends)

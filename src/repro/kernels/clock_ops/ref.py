@@ -1,25 +1,38 @@
-"""Pure-jnp oracles for the bitwise clock-lattice kernels."""
+"""Pure-jnp oracles for the interval clock-lattice kernels.
+
+Each op is the boundary-sweep run merge of
+:func:`repro.core.vclock._interval_merge` over ``(lo, hi)`` run arrays —
+union (join), difference (tombstone shrink, §4.3.3) and intersection
+(tombstone ∩ raw trim) — plus run-length popcount.  Outputs are the
+*unsorted* merged run arrays; the ops wrapper canonicalises row order for
+both the ref and Pallas paths.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-
-def join_ref(a_bits: jax.Array, b_bits: jax.Array) -> jax.Array:
-    """Window union: set-clock ⊔ delta-clock (uint32[A, W])."""
-    return a_bits | b_bits
+from ...core.vclock import _interval_merge
 
 
-def subtract_ref(a_bits: jax.Array, b_bits: jax.Array) -> jax.Array:
-    """Tombstone shrink (§4.3.3): a AND NOT b."""
-    return a_bits & ~b_bits
+def join_ref(a_s: jax.Array, a_e: jax.Array,
+             b_s: jax.Array, b_e: jax.Array):
+    """Run union: set-clock ⊔ delta-clock (int32[A, Ra+Rb] pair)."""
+    return _interval_merge(a_s, a_e, b_s, b_e, "or")
 
 
-def popcount_ref(bits: jax.Array) -> jax.Array:
-    """Events per actor in the window — clock-density stats (int32[A])."""
-    x = bits
-    x = x - ((x >> jnp.uint32(1)) & jnp.uint32(0x55555555))
-    x = (x & jnp.uint32(0x33333333)) + ((x >> jnp.uint32(2)) & jnp.uint32(0x33333333))
-    x = (x + (x >> jnp.uint32(4))) & jnp.uint32(0x0F0F0F0F)
-    x = (x * jnp.uint32(0x01010101)) >> jnp.uint32(24)
-    return x.astype(jnp.int32).sum(axis=-1)
+def subtract_ref(a_s: jax.Array, a_e: jax.Array,
+                 b_s: jax.Array, b_e: jax.Array):
+    """Tombstone shrink (§4.3.3): a minus b, origin-free run difference."""
+    return _interval_merge(a_s, a_e, b_s, b_e, "andnot")
+
+
+def intersect_ref(a_s: jax.Array, a_e: jax.Array,
+                  b_s: jax.Array, b_e: jax.Array):
+    """Run intersection: events seen by both clocks."""
+    return _interval_merge(a_s, a_e, b_s, b_e, "and")
+
+
+def popcount_ref(starts: jax.Array, ends: jax.Array) -> jax.Array:
+    """Events per actor — Σ (hi - lo + 1) over valid runs (int32[A])."""
+    return jnp.maximum(ends - starts + 1, 0).sum(axis=-1)

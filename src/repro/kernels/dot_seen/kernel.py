@@ -1,22 +1,21 @@
-"""Pallas TPU kernel: batched dot-seen test against a dense clock.
+"""Pallas TPU kernel: batched dot-seen test against a dense interval clock.
 
 TPU adaptation (see DESIGN.md §2): TPUs have no efficient scatter/gather
-unit, so the per-dot lookups ``origin[actor]`` and ``bits[actor, word]``
+unit, so the per-dot row lookups ``starts[actor, :]`` / ``ends[actor, :]``
 are expressed as **one-hot contractions on the MXU**:
 
-* ``origin[actor]``      → onehot(actors, A) @ origin            [BN]
-* ``bits[actor, :]``     → onehot(actors, A) @ bits               [BN, W]
-* ``row[word]``          → Σ_w onehot(word, W) ⊙ row              [BN]
+* ``starts[actor, :]`` → onehot(actors, A) @ starts          [BN, R]
+* ``ends[actor, :]``   → onehot(actors, A) @ ends            [BN, R]
 
-uint32 words are split into two exact-in-f32 uint16 halves before the
-contraction and reassembled in integer registers, keeping the test
-bit-exact.  The whole clock (origin + bitmap) is VMEM-resident — it is
-causal-metadata-sized, which is the paper's entire point — while the dot
-stream is tiled over the grid.
+Run bounds and counters are exact in f32 (< 2²⁴), so the contraction is
+bit-exact; the membership test ``any(lo ≤ c ≤ hi)`` is then a VPU
+broadcast-compare over the R run columns.  The whole clock (starts + ends)
+is VMEM-resident — it is causal-metadata-sized, O(interval runs), which is
+the paper's entire point — while the dot stream is tiled over the grid.
 
-VMEM budget per block (A=128, W=256, BN=1024):
-  bits halves 2·128·256·4B = 256 KiB, onehotA 1024·128·4 = 512 KiB,
-  rows 2·1024·256·4 = 2 MiB, onehotW 1 MiB  →  ~4 MiB  <  16 MiB VMEM.
+VMEM budget per block (A=128, R=256, BN=1024):
+  runs 2·128·256·4B = 256 KiB, onehotA 1024·128·4 = 512 KiB,
+  rows 2·1024·256·4 = 2 MiB  →  ~2.8 MiB  <  16 MiB VMEM.
 """
 from __future__ import annotations
 
@@ -29,45 +28,31 @@ from jax.experimental import pallas as pl
 DEFAULT_BLOCK_N = 1024
 
 
-def _kernel(origin_ref, bits_lo_ref, bits_hi_ref, actors_ref, counters_ref,
-            out_ref, *, n_actors: int, n_words: int):
+def _kernel(starts_ref, ends_ref, actors_ref, counters_ref, out_ref,
+            *, n_actors: int):
     actors = actors_ref[...]                            # int32[BN]
     counters = counters_ref[...]                        # int32[BN]
     bn = actors.shape[0]
 
-    # --- gather origin[actor] via one-hot matmul (f32-exact: A, counters small)
+    # --- gather the actor's run row via one-hot matmul (f32-exact: < 2^24)
     onehot_a = (actors[:, None] == jax.lax.broadcasted_iota(
         jnp.int32, (bn, n_actors), 1)).astype(jnp.float32)      # [BN, A]
-    origin_f = origin_ref[...].astype(jnp.float32)              # [A]
-    org = jnp.dot(onehot_a, origin_f[:, None],
-                  preferred_element_type=jnp.float32)[:, 0]     # [BN]
-    org = org.astype(jnp.int32)
+    rows_s = jnp.dot(onehot_a, starts_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)        # [BN, R]
+    rows_e = jnp.dot(onehot_a, ends_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)        # [BN, R]
 
-    rel = counters - org - 1                                    # [BN]
-    word = jnp.clip(rel // 32, 0, n_words - 1)
-    bit = (rel % 32).astype(jnp.uint32)
-    in_window = (rel >= 0) & (rel < n_words * 32)
-
-    # --- gather bits[actor, word] via two one-hot contractions, 16b halves
-    rows_lo = jnp.dot(onehot_a, bits_lo_ref[...],
-                      preferred_element_type=jnp.float32)       # [BN, W]
-    rows_hi = jnp.dot(onehot_a, bits_hi_ref[...],
-                      preferred_element_type=jnp.float32)       # [BN, W]
-    onehot_w = (word[:, None] == jax.lax.broadcasted_iota(
-        jnp.int32, (bn, n_words), 1)).astype(jnp.float32)       # [BN, W]
-    lo = jnp.sum(rows_lo * onehot_w, axis=1)                    # [BN] f32
-    hi = jnp.sum(rows_hi * onehot_w, axis=1)
-    wval = lo.astype(jnp.uint32) | (hi.astype(jnp.uint32) << jnp.uint32(16))
-
-    hit = ((wval >> bit) & jnp.uint32(1)) == jnp.uint32(1)
-    seen = (counters <= org) | (in_window & hit)
+    # --- interval membership: empty slots are (1, 0), which never match
+    c = counters[:, None].astype(jnp.float32)                   # [BN, 1]
+    hit = (rows_s <= c) & (c <= rows_e)                         # [BN, R]
+    seen = jnp.any(hit, axis=1)
     out_ref[...] = seen.astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def dot_seen_pallas(
-    origin: jax.Array,    # int32[A]
-    bits: jax.Array,      # uint32[A, W]
+    starts: jax.Array,    # int32[A, R]
+    ends: jax.Array,      # int32[A, R]
     actors: jax.Array,    # int32[N]
     counters: jax.Array,  # int32[N]
     *,
@@ -75,9 +60,7 @@ def dot_seen_pallas(
     interpret: bool = True,
 ) -> jax.Array:
     n = actors.shape[0]
-    n_actors, n_words = bits.shape
-    bits_lo = (bits & jnp.uint32(0xFFFF)).astype(jnp.float32)
-    bits_hi = (bits >> jnp.uint32(16)).astype(jnp.float32)
+    n_actors, n_runs = starts.shape
 
     pad = (-n) % block_n
     if pad:
@@ -87,17 +70,16 @@ def dot_seen_pallas(
 
     grid = (n_pad // block_n,)
     out = pl.pallas_call(
-        functools.partial(_kernel, n_actors=n_actors, n_words=n_words),
+        functools.partial(_kernel, n_actors=n_actors),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((n_actors,), lambda i: (0,)),            # origin
-            pl.BlockSpec((n_actors, n_words), lambda i: (0, 0)),  # bits lo
-            pl.BlockSpec((n_actors, n_words), lambda i: (0, 0)),  # bits hi
+            pl.BlockSpec((n_actors, n_runs), lambda i: (0, 0)),   # starts
+            pl.BlockSpec((n_actors, n_runs), lambda i: (0, 0)),   # ends
             pl.BlockSpec((block_n,), lambda i: (i,)),             # actors
             pl.BlockSpec((block_n,), lambda i: (i,)),             # counters
         ],
         out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
         interpret=interpret,
-    )(origin, bits_lo, bits_hi, actors, counters)
+    )(starts, ends, actors, counters)
     return out[:n].astype(bool)

@@ -2,7 +2,9 @@
 
 Dispatch: Pallas (interpret on CPU, compiled on TPU) or the pure-jnp
 reference.  The bigset read fold and delta-batch dedup call this with the
-tombstone / set-clock in dense form.
+tombstone / set-clock in dense *interval* form: per-actor ``(lo, hi)`` run
+arrays (``DenseClock.starts`` / ``.ends``), O(interval runs) with no
+window cap.
 
 Every call is tallied in the process-wide :data:`DISPATCHES` ledger
 (launch count + rows dispatched, padding included).  That ledger is the
@@ -62,6 +64,6 @@ def dot_seen(
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         return dot_seen_pallas(
-            clock.origin, clock.bits, actors, counters, interpret=interpret
+            clock.starts, clock.ends, actors, counters, interpret=interpret
         )
-    return dot_seen_ref(clock.origin, clock.bits, actors, counters)
+    return dot_seen_ref(clock.starts, clock.ends, actors, counters)

@@ -1,22 +1,22 @@
 """Pure-jnp oracle for the dot-seen kernel.
 
 Semantics are exactly :func:`repro.core.vclock.dots_seen`: for each dot
-``(actor, counter)``, test whether the dense clock (origin VV + window
-bitmap) has observed it.  This is the per-element-key filter of the bigset
-read fold and the dedup test of delta apply (paper Algorithms 1 & 2).
+``(actor, counter)``, test whether the dense interval clock (per-actor
+``(lo, hi)`` run arrays) has observed it.  This is the per-element-key
+filter of the bigset read fold and the dedup test of delta apply (paper
+Algorithms 1 & 2).
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from ...core.vclock import DenseClock, dots_seen as _dots_seen
 
 
 def dot_seen_ref(
-    origin: jax.Array,    # int32[A]
-    bits: jax.Array,      # uint32[A, W]
+    starts: jax.Array,    # int32[A, R]
+    ends: jax.Array,      # int32[A, R]
     actors: jax.Array,    # int32[N]
     counters: jax.Array,  # int32[N]
 ) -> jax.Array:           # bool[N]
-    return _dots_seen(DenseClock(origin, bits), actors, counters)
+    return _dots_seen(DenseClock(starts, ends), actors, counters)

@@ -8,11 +8,15 @@ counters)`` ``int32`` arrays and dispatches the ``kernels/dot_seen`` kernel
 keys resolves in one device call.
 
 The tombstone is converted once per query into the dense
-:class:`~repro.core.vclock.DenseClock` form (origin VV + window bitmap);
-every chunk then reuses it.  Dots by actors the tombstone has never heard of
-are unseen by definition and short-circuit without touching the device.
-Batch shapes are padded to a fixed bucket so jit traces a handful of shapes,
-not one per chunk length.
+:class:`~repro.core.vclock.DenseClock` *interval* form (per-actor
+``(lo, hi)`` run arrays); every chunk then reuses it.  The build is
+O(interval runs) — causal metadata — with **no window cap**: the old
+bitmap form had to fall back to scalar probes beyond a fixed per-actor
+spread, but a run covers any span at constant cost.  Dots by actors the
+tombstone has never heard of are unseen by definition and route to the
+sentinel counter ``0``, which no 1-based run can contain.  Batch shapes
+are padded to a fixed bucket so jit traces a handful of shapes, not one
+per chunk length.
 """
 from __future__ import annotations
 
@@ -24,9 +28,6 @@ from ..core.clock import Clock
 from ..core.dots import Dot
 from ..core.vclock import from_clock
 
-# Above this window (in events per actor) the dense bitmap build costs more
-# than it saves; fall back to scalar probes.
-MAX_WINDOW_EVENTS = 1 << 17
 # Chunks smaller than this aren't worth a device dispatch.
 MIN_BATCH = 32
 # Pad batches up to a multiple of this so jit sees few distinct shapes.
@@ -54,30 +55,17 @@ class BatchVisibility:
         self.stats = stats
         self._dense = None
         self._actor_index: Dict[object, int] = {}
-        self._sentinel = 0  # counter guaranteed unseen by the dense clock
+        # counters are 1-based, so 0 is unseen by every run — the routing
+        # target for padding and for actors the tombstone never heard of
+        self._sentinel = 0
 
         if tombstone.is_zero():
             self._mode = "empty"
             return
-        # Anchor the dense window at the base VV: events at/below the base
-        # resolve via `counter <= origin`, so the bitmap only spans the
-        # dot-cloud spread — building it is O(cloud), independent of how
-        # many events the base has absorbed.
-        span = 1
-        for a, s in tombstone.cloud.items():
-            span = max(span, max(s) - tombstone.base.get(a, 0))
-        if span > MAX_WINDOW_EVENTS:
-            self._mode = "scalar"  # pathological cloud spread
-            return
         self._mode = "dense"
         actors = sorted(tombstone.actors(), key=repr)
         self._actor_index = {a: i for i, a in enumerate(actors)}
-        origin = np.array(
-            [tombstone.base.get(a, 0) for a in actors], np.int32)
-        n_words = max(1, -(-span // 32))
-        self._dense = from_clock(
-            tombstone, self._actor_index, len(actors), n_words, origin=origin)
-        self._sentinel = int(origin.max()) + n_words * 32 + 1
+        self._dense = from_clock(tombstone, self._actor_index, len(actors))
 
     # ------------------------------------------------------------------ api
     def seen_mask(self, dots: Sequence[Dot]) -> np.ndarray:
@@ -87,7 +75,7 @@ class BatchVisibility:
             return np.zeros((0,), bool)
         if self._mode == "empty":
             return np.zeros((n,), bool)
-        if self._mode == "scalar" or n < self.min_batch:
+        if n < self.min_batch:
             ts = self.tombstone
             return np.fromiter((ts.seen(d) for d in dots), bool, count=n)
         idx = self._actor_index
@@ -96,8 +84,8 @@ class BatchVisibility:
         for i, d in enumerate(dots):
             j = idx.get(d.actor, -1)
             if j < 0:
-                # unknown actor: route to slot 0 with an out-of-window
-                # counter, which the kernel reports unseen
+                # unknown actor: route to slot 0 with the sentinel counter,
+                # which the kernel reports unseen
                 actors[i] = 0
                 counters[i] = self._sentinel
             else:

@@ -43,6 +43,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 import msgpack
 
 from ..cluster.clusters import BigsetCluster, ClusterSession
+from ..core.clock import runs_from_counters
 from ..core.dots import Dot, DotList
 from ..obs.metrics import (MetricsRegistry, lift_ae_stats,
                            lift_dispatch_stats, lift_io_stats, lift_network,
@@ -93,12 +94,37 @@ class ServiceConfig:
 
 # ----------------------------------------------------------------- wire dots
 def dots_to_wire(dots: Sequence[Dot]) -> List[List]:
-    return [[d.actor, d.counter] for d in dots]
+    """Run-compressed causal context: ``[[actor, lo, hi], ...]``.
+
+    Contiguous counters per actor coalesce into one triple, so a ctx stays
+    O(interval runs) on the wire however many dots it covers.  A single dot
+    rides as ``[actor, c, c]``.
+    """
+    by_actor: dict = {}
+    for d in dots:
+        by_actor.setdefault(d.actor, []).append(d.counter)
+    out: List[List] = []
+    for a in sorted(by_actor, key=repr):
+        for lo, hi in runs_from_counters(by_actor[a]):
+            out.append([a, lo, hi])
+    return out
 
 
 def dots_from_wire(wire) -> DotList:
+    """Decode a wire ctx — run triples or the legacy per-dot 2-lists."""
     try:
-        return tuple(Dot(a, int(c)) for a, c in wire or ())
+        out: List[Dot] = []
+        for item in wire or ():
+            if len(item) == 2:          # legacy [actor, counter]
+                a, c = item
+                out.append(Dot(a, int(c)))
+            else:
+                a, lo, hi = item
+                lo, hi = int(lo), int(hi)
+                if lo > hi:
+                    raise ValueError(f"empty run [{lo}, {hi}]")
+                out.extend(Dot(a, c) for c in range(lo, hi + 1))
+        return tuple(out)
     except (TypeError, ValueError) as e:
         raise ServiceError("request", f"malformed dot list: {e}") from None
 
@@ -589,14 +615,14 @@ class BigsetClient:
             body["cursor"] = cursor
         out = self._call("query", body)
         return Page(
-            entries=[(el, tuple(Dot(a, c) for a, c in dots))
+            entries=[(el, dots_from_wire(dots))
                      for el, dots in out["entries"]],
             cursor=out.get("cursor"),
             stats=out.get("stats", {}),
             present=out.get("present"),
             count=out.get("count"),
             index_entries=[
-                (ik, el, tuple(Dot(a, c) for a, c in dots))
+                (ik, el, dots_from_wire(dots))
                 for ik, el, dots in out["index_entries"]]
             if out.get("index_entries") is not None else None,
         )

@@ -1,0 +1,22 @@
+"""BS008 fixture: run-granular surface and same-named fields elsewhere."""
+from repro.core.clock import Clock
+
+
+class WeatherModel:
+    def __init__(self):
+        self.cloud = "cumulus"   # WeatherModel.cloud, not Clock.cloud
+
+    def forecast(self):
+        return self.cloud.upper()
+
+
+def sync_ranges(mine: Clock, theirs: Clock):
+    # the sanctioned O(runs) surface: ranges in, ranges out
+    diverged = mine.diff_runs(theirs)
+    healed = theirs.add_runs(diverged)
+    return healed.n_runs(), mine.subtract_clock(theirs).size_bytes()
+
+
+def divergence(mine: Clock, theirs: Clock):
+    # diff_dots is allowed: it materialises only the actual divergence
+    return mine.diff_dots(theirs)

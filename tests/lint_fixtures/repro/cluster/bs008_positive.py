@@ -1,0 +1,15 @@
+"""BS008 fixture: raw per-dot cloud enumeration outside core/."""
+from repro.core.clock import Clock
+
+
+def fragmentation_report(clock: Clock, other: Clock):
+    per_actor = {a: len(s) for a, s in clock.cloud.items()}  # BS008: .cloud
+    dots = clock.all_dots()                                  # BS008: full walk
+    for d in other.all_dots():                               # BS008: full walk
+        per_actor[d.actor] = d.counter
+    return per_actor, dots
+
+
+def sneaky(c):
+    # receiver type unresolvable -> conservative finding
+    return sorted(c.cloud)                                   # BS008

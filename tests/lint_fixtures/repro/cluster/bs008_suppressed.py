@@ -1,0 +1,6 @@
+"""BS008 suppressed: a justified per-dot escape for an ops dump."""
+from repro.core.clock import Clock
+
+
+def debug_dump(clock: Clock):
+    return clock.all_dots()  # bigset-lint: disable=BS008 -- cold-path ops dump; explicitly O(events)

@@ -135,3 +135,112 @@ class TestDiffDots:
     @settings(max_examples=30, deadline=None)
     def test_diff_against_join_is_empty(self, x, y):
         assert x.diff_dots(x.join(y)) == ()
+
+
+class TestOracleEquivalence:
+    """Model-based check: interval clock vs a plain set-of-dots oracle.
+
+    The oracle is the dot *set* the operations are defined over in the
+    paper; the interval clock must agree on every op while storing only
+    (lo, hi) runs.
+    """
+
+    @given(dots_st, dots_st)
+    @settings(max_examples=80, deadline=None)
+    def test_ops_match_set_oracle(self, da, db):
+        ox, oy = set(da), set(db)
+        x, y = clock_of(da), clock_of(db)
+        for d in da + db:
+            assert x.seen(d) == (d in ox)
+        assert set(x.join(y).all_dots()) == ox | oy
+        assert set(x.subtract_clock(y).all_dots()) == ox - oy
+        assert set(x.intersect(y).all_dots()) == ox & oy
+        assert set(x.diff_dots(y)) == ox - oy
+
+    @given(dots_st, dots_st)
+    @settings(max_examples=60, deadline=None)
+    def test_diff_runs_expands_to_diff_dots(self, da, db):
+        x, y = clock_of(da), clock_of(db)
+        expanded = tuple(sorted(
+            Dot(a, c)
+            for a, lo, hi in x.diff_runs(y)
+            for c in range(lo, hi + 1)))
+        assert expanded == x.diff_dots(y)
+
+    @given(dots_st, dots_st)
+    @settings(max_examples=60, deadline=None)
+    def test_add_runs_absorbs_diff(self, da, db):
+        # digest sync in one line: absorbing the diverged ranges converges
+        x, y = clock_of(da), clock_of(db)
+        assert y.add_runs(x.diff_runs(y)) == x.join(y)
+
+
+class TestRunInvariants:
+    """Invariant 12: per-actor runs are sorted, disjoint, non-adjacent,
+    1-based, and start strictly above base+1."""
+
+    @given(dots_st, dots_st, dots_st)
+    @settings(max_examples=80, deadline=None)
+    def test_canonical_after_random_ops(self, da, db, gone):
+        c = clock_of(da).join(clock_of(db)).subtract(gone)
+        for a, rs in c.runs.items():
+            assert rs, "empty run lists must be dropped from the dict"
+            prev_hi = c.base.get(a, 0)
+            for lo, hi in rs:
+                assert 1 <= lo <= hi
+                assert lo >= prev_hi + 2, "runs must be coalesced into base/neighbour"
+                prev_hi = hi
+
+    @given(st.lists(st.tuples(st.sampled_from(ACTORS), st.integers(1, 20),
+                              st.integers(0, 6)), max_size=10))
+    @settings(max_examples=60, deadline=None)
+    def test_add_runs_matches_add_dots(self, ranges):
+        rs = [(a, lo, lo + w) for a, lo, w in ranges]
+        via_runs = Clock.zero().add_runs(rs)
+        via_dots = Clock.zero().add_dots(
+            Dot(a, c) for a, lo, hi in rs for c in range(lo, hi + 1))
+        assert via_runs == via_dots
+
+
+class TestChurnCompression:
+    """Serialized size is O(actors + live runs) — never O(removed dots)."""
+
+    @given(st.integers(100, 400),
+           st.lists(st.integers(1, 400), max_size=120, unique=True).map(set))
+    @settings(max_examples=40, deadline=None)
+    def test_size_tracks_live_runs(self, n, removed):
+        removed = {r for r in removed if r <= n}
+        c = Clock(base={"x": n}).subtract([Dot("x", r) for r in removed])
+        live = sorted(set(range(1, n + 1)) - removed)
+        spans = sum(1 for i, v in enumerate(live) if i == 0 or v != live[i - 1] + 1)
+        assert c.n_runs() == spans
+        assert c.size_bytes() == 24 * spans
+        assert c.n_events() == len(live)
+
+    def test_span_removal_is_o_runs(self):
+        # 50k removals in one contiguous span cost one run boundary, not
+        # 50k cloud entries — the paper's "hole problem", solved.
+        c = Clock(base={"x": 100_000})
+        hole = Clock.zero().add_runs([("x", 20_001, 70_000)])
+        c2 = c.subtract_clock(hole)
+        assert c2.n_runs() == 2
+        assert c2.size_bytes() == 48
+        assert c2.n_events() == 50_000
+
+
+class TestCodecVersions:
+    def test_new_obj_is_run_length(self):
+        c = Clock(base={"x": 5}).add_runs([("x", 8, 12)])
+        assert c.to_obj() == {"b": [("x", 5)], "r": [("x", [[8, 12]])]}
+
+    @given(dots_st)
+    @settings(max_examples=40, deadline=None)
+    def test_legacy_per_dot_objs_decode(self, dots):
+        c = clock_of(dots)
+        cloud = sorted((a, sorted(s)) for a, s in c.cloud.items())
+        legacy_msgpack = {"b": sorted(c.base.items()), "c": cloud}
+        legacy_verbose = {"base": sorted(c.base.items()), "cloud": cloud}
+        assert Clock.from_obj(legacy_msgpack) == c
+        assert Clock.from_obj(legacy_verbose) == c
+        # and re-encoding upgrades to the run-length form
+        assert "r" in Clock.from_obj(legacy_msgpack).to_obj()

@@ -10,7 +10,6 @@ from numpy.testing import assert_allclose
 from repro.core import vclock
 from repro.core.clock import Clock
 from repro.core.dots import Dot
-from repro.kernels.clock_ops import kernel as ck, ref as cr
 from repro.kernels.decode_attention import decode_attention_pallas, decode_attention_ref
 from repro.kernels.dot_seen import dot_seen_pallas, dot_seen_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention_pallas
@@ -20,96 +19,158 @@ RNG = np.random.default_rng(0)
 
 
 # --------------------------------------------------------------------- vclock
+ACTORS4 = ["a", "b", "c", "d"]
+IDX4 = {a: i for i, a in enumerate(ACTORS4)}
+
+
+def _sparse(dots):
+    return Clock.zero().add_dots(Dot(ACTORS4[a], c) for a, c in dots)
+
+
 class TestVClock:
     @given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 90)), max_size=40))
     @settings(max_examples=60, deadline=None)
     def test_dense_seen_matches_sparse(self, dots):
-        actors = ["a", "b", "c", "d"]
-        sparse = Clock.zero().add_dots(Dot(actors[a], c) for a, c in dots)
-        dense = vclock.from_clock(sparse, {a: i for i, a in enumerate(actors)}, 4, 4)
+        sparse = _sparse(dots)
+        dense = vclock.from_clock(sparse, IDX4, 4)
         probe_a = np.array([a for a, _ in dots] + [0, 1, 2, 3], np.int32)
         probe_c = np.array([c for _, c in dots] + [1, 64, 90, 128], np.int32)
         got = np.asarray(vclock.dots_seen(dense, jnp.asarray(probe_a), jnp.asarray(probe_c)))
-        want = np.array([sparse.seen(Dot(actors[a], int(c)))
+        want = np.array([sparse.seen(Dot(ACTORS4[a], int(c)))
                          for a, c in zip(probe_a, probe_c)])
         assert (got == want).all()
 
     @given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 120)), max_size=40))
     @settings(max_examples=50, deadline=None)
     def test_roundtrip_sparse_dense_sparse(self, dots):
-        actors = ["a", "b", "c", "d"]
-        sparse = Clock.zero().add_dots(Dot(actors[a], c) for a, c in dots)
-        dense = vclock.from_clock(sparse, {a: i for i, a in enumerate(actors)}, 4, 4)
-        assert vclock.to_clock(dense, actors) == sparse
+        sparse = _sparse(dots)
+        dense = vclock.from_clock(sparse, IDX4, 4)
+        assert vclock.to_clock(dense, ACTORS4) == sparse
 
     @given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 100)), max_size=30),
            st.lists(st.tuples(st.integers(0, 3), st.integers(1, 100)), max_size=30))
     @settings(max_examples=40, deadline=None)
     def test_dense_join_matches_sparse(self, d1, d2):
-        actors = ["a", "b", "c", "d"]
-        idx = {a: i for i, a in enumerate(actors)}
-        s1 = Clock.zero().add_dots(Dot(actors[a], c) for a, c in d1)
-        s2 = Clock.zero().add_dots(Dot(actors[a], c) for a, c in d2)
-        j = vclock.join(vclock.from_clock(s1, idx, 4, 4),
-                        vclock.from_clock(s2, idx, 4, 4))
-        assert vclock.to_clock(j, actors) == s1.join(s2)
+        s1, s2 = _sparse(d1), _sparse(d2)
+        j = vclock.join(vclock.from_clock(s1, IDX4, 4),
+                        vclock.from_clock(s2, IDX4, 4))
+        assert vclock.to_clock(j, ACTORS4) == s1.join(s2)
 
-    def test_compress_folds_prefix(self):
-        dense = vclock.zero(2, 2)
-        dense = vclock.add_dots(dense, jnp.array([0] * 40, jnp.int32),
-                                jnp.arange(1, 41, dtype=jnp.int32))
-        c = vclock.compress(dense)
-        assert int(c.origin[0]) == 40 and int(c.origin[1]) == 0
-        assert int(c.bits.sum()) == 0
+    @given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 100)), max_size=30),
+           st.lists(st.tuples(st.integers(0, 3), st.integers(1, 100)), max_size=30))
+    @settings(max_examples=40, deadline=None)
+    def test_dense_subtract_intersect_match_sparse(self, d1, d2):
+        s1, s2 = _sparse(d1), _sparse(d2)
+        a = vclock.from_clock(s1, IDX4, 4)
+        b = vclock.from_clock(s2, IDX4, 4)
+        assert vclock.to_clock(vclock.subtract(a, b), ACTORS4) == s1.subtract_clock(s2)
+        assert vclock.to_clock(vclock.intersect(a, b), ACTORS4) == s1.intersect(s2)
 
-    def test_compress_stops_at_gap(self):
-        dense = vclock.zero(1, 2)
-        cs = jnp.array([1, 2, 3, 5, 6], jnp.int32)
-        dense = vclock.add_dots(dense, jnp.zeros(5, jnp.int32), cs)
-        c = vclock.compress(dense)
-        assert int(c.origin[0]) == 3
-        got = vclock.dots_seen(c, jnp.zeros(6, jnp.int32),
-                               jnp.array([1, 2, 3, 4, 5, 6], jnp.int32))
-        assert np.asarray(got).tolist() == [True, True, True, False, True, True]
+    @given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 80)), max_size=25),
+           st.lists(st.tuples(st.integers(0, 3), st.integers(1, 80)),
+                    min_size=1, max_size=25))
+    @settings(max_examples=40, deadline=None)
+    def test_dense_add_dots_matches_sparse(self, base, extra):
+        sparse = _sparse(base)
+        dense = vclock.from_clock(sparse, IDX4, 4)
+        added = vclock.add_dots(
+            dense,
+            jnp.asarray([a for a, _ in extra], jnp.int32),
+            jnp.asarray([c for _, c in extra], jnp.int32))
+        want = sparse.add_dots(Dot(ACTORS4[a], c) for a, c in extra)
+        assert vclock.to_clock(added, ACTORS4) == want
+
+    def test_subtract_is_origin_free(self):
+        # Subtraction punches holes *below the base* — the old windowed
+        # bitmap could not represent that without a scalar fallback.
+        s1 = Clock.zero().add_dots(Dot("a", c) for c in range(1, 41))
+        s2 = Clock.zero().add_dots(Dot("a", c) for c in (2, 9, 40))
+        d = vclock.subtract(vclock.from_clock(s1, IDX4, 4),
+                            vclock.from_clock(s2, IDX4, 4))
+        assert vclock.to_clock(d, ACTORS4) == s1.subtract_clock(s2)
+        assert int(vclock.popcount(d).sum()) == 37
+
+    def test_no_window_cap(self):
+        # A single run covers an arbitrarily wide span at constant cost.
+        wide = Clock(base={"a": 1_000_000})
+        dense = vclock.from_clock(wide, IDX4, 4)
+        assert dense.n_runs == 1
+        got = vclock.dots_seen(dense,
+                               jnp.zeros(3, jnp.int32),
+                               jnp.array([1, 999_999, 1_000_001], jnp.int32))
+        assert np.asarray(got).tolist() == [True, True, False]
 
 
 # ------------------------------------------------------------------- dot_seen
+def _random_dense(n_actors, n_runs, hi, rng):
+    """Random canonical interval arrays plus the sparse oracle."""
+    names = [f"v{i}" for i in range(n_actors)]
+    n_dots = n_actors * n_runs * 2
+    sparse = Clock.zero().add_dots(
+        Dot(names[int(a)], int(c))
+        for a, c in zip(rng.integers(0, n_actors, n_dots),
+                        rng.integers(1, hi, n_dots)))
+    idx = {a: i for i, a in enumerate(names)}
+    return vclock.from_clock(sparse, idx, n_actors), sparse, names
+
+
 class TestDotSeenKernel:
-    @pytest.mark.parametrize("n_actors,n_words,n_dots,block_n", [
+    @pytest.mark.parametrize("n_actors,n_runs,n_dots,block_n", [
         (4, 8, 64, 32),
         (16, 32, 1000, 256),
-        (128, 64, 4096, 1024),
+        (128, 16, 4096, 1024),
         (3, 2, 17, 64),     # ragged: pad path
     ])
-    def test_matches_ref(self, n_actors, n_words, n_dots, block_n):
-        origin = jnp.asarray(RNG.integers(0, 50, n_actors), jnp.int32)
-        bits = jnp.asarray(
-            RNG.integers(0, 1 << 32, (n_actors, n_words), dtype=np.uint64)
-            .astype(np.uint32))
+    def test_matches_ref(self, n_actors, n_runs, n_dots, block_n):
+        dense, sparse, names = _random_dense(n_actors, n_runs, n_runs * 40, RNG)
         actors = jnp.asarray(RNG.integers(0, n_actors, n_dots), jnp.int32)
-        counters = jnp.asarray(RNG.integers(1, n_words * 32 + 80, n_dots), jnp.int32)
-        got = dot_seen_pallas(origin, bits, actors, counters, block_n=block_n)
-        want = dot_seen_ref(origin, bits, actors, counters)
+        counters = jnp.asarray(RNG.integers(1, n_runs * 40 + 80, n_dots), jnp.int32)
+        got = dot_seen_pallas(dense.starts, dense.ends, actors, counters,
+                              block_n=block_n)
+        want = dot_seen_ref(dense.starts, dense.ends, actors, counters)
         assert (np.asarray(got) == np.asarray(want)).all()
+        oracle = np.array([sparse.seen(Dot(names[int(a)], int(c)))
+                           for a, c in zip(np.asarray(actors), np.asarray(counters))])
+        assert (np.asarray(got) == oracle).all()
 
     def test_extremes(self):
-        origin = jnp.array([0, 1000], jnp.int32)
-        bits = jnp.zeros((2, 4), jnp.uint32).at[0, 3].set(0x80000000)
-        actors = jnp.array([0, 0, 1, 1], jnp.int32)
-        counters = jnp.array([128, 127, 1000, 1001], jnp.int32)
-        got = dot_seen_pallas(origin, bits, actors, counters, block_n=32)
-        assert np.asarray(got).tolist() == [True, False, True, False]
+        # Large counters stay exact through the f32 one-hot gather (< 2^24).
+        starts = jnp.array([[1, 128], [1, 0]], jnp.int32)
+        ends = jnp.array([[100, 128], [16_000_000, 0]], jnp.int32)
+        actors = jnp.array([0, 0, 0, 1, 1], jnp.int32)
+        counters = jnp.array([128, 127, 101, 16_000_000, 16_000_001], jnp.int32)
+        got = dot_seen_pallas(starts, ends, actors, counters, block_n=32)
+        assert np.asarray(got).tolist() == [True, False, False, True, False]
 
 
 # ------------------------------------------------------------------ clock_ops
 class TestClockOpsKernels:
-    @pytest.mark.parametrize("a_shape", [(4, 16), (8, 512), (13, 100)])
-    def test_join_subtract_popcount(self, a_shape):
-        a = jnp.asarray(RNG.integers(0, 1 << 32, a_shape, dtype=np.uint64).astype(np.uint32))
-        b = jnp.asarray(RNG.integers(0, 1 << 32, a_shape, dtype=np.uint64).astype(np.uint32))
-        assert (np.asarray(ck.join_pallas(a, b)) == np.asarray(cr.join_ref(a, b))).all()
-        assert (np.asarray(ck.subtract_pallas(a, b)) == np.asarray(cr.subtract_ref(a, b))).all()
-        assert (np.asarray(ck.popcount_pallas(a)) == np.asarray(cr.popcount_ref(a))).all()
+    @pytest.mark.parametrize("n_actors,n_runs", [(4, 16), (8, 64), (13, 25)])
+    def test_pallas_matches_ref_and_oracle(self, n_actors, n_runs):
+        from repro.kernels.clock_ops import intersect, join, popcount, subtract
+
+        rng = np.random.default_rng(n_actors * 100 + n_runs)
+        da, sa, names = _random_dense(n_actors, n_runs, n_runs * 20, rng)
+        db, sb, _ = _random_dense(n_actors, n_runs, n_runs * 20, rng)
+        for op, sparse_want in [
+            (join, sa.join(sb)),
+            (subtract, sa.subtract_clock(sb)),
+            (intersect, sa.intersect(sb)),
+        ]:
+            got_p = op(da, db, use_pallas=True, interpret=True)
+            got_r = op(da, db, use_pallas=False)
+            assert (np.asarray(got_p.starts) == np.asarray(got_r.starts)).all()
+            assert (np.asarray(got_p.ends) == np.asarray(got_r.ends)).all()
+            assert vclock.to_clock(got_p, names) == sparse_want
+
+    def test_popcount(self):
+        from repro.kernels.clock_ops import popcount
+
+        dense, sparse, names = _random_dense(6, 12, 300, np.random.default_rng(7))
+        got = np.asarray(popcount(dense, use_pallas=True, interpret=True))
+        want = np.asarray(popcount(dense, use_pallas=False))
+        assert (got == want).all()
+        assert int(got.sum()) == sparse.n_events()
 
 
 # ------------------------------------------------------------ flash attention

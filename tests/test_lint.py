@@ -44,10 +44,16 @@ GOLDEN = {
     "repro/cluster/bs002_negative.py": [],
     "repro/cluster/bs002_suppressed.py": [],
     "repro/cluster/bs003_positive.py": [
-        ("BS003", 8), ("BS003", 9), ("BS003", 11), ("BS003", 17),
+        ("BS003", 8), ("BS003", 9), ("BS008", 9), ("BS003", 11),
+        ("BS003", 17),
     ],
     "repro/cluster/bs003_negative.py": [],
     "repro/cluster/bs005_out_of_scope.py": [],
+    "repro/cluster/bs008_positive.py": [
+        ("BS008", 6), ("BS008", 7), ("BS008", 8), ("BS008", 15),
+    ],
+    "repro/cluster/bs008_negative.py": [],
+    "repro/cluster/bs008_suppressed.py": [],
     "repro/query/bs004_positive.py": [("BS004", 6), ("BS004", 11)],
     "repro/query/bs004_negative.py": [],
     "repro/query/bs004_suppressed.py": [],
@@ -91,13 +97,14 @@ class TestGoldenFixtures:
 
     def test_suppressions_counted(self, fixture_result):
         # bs001_suppressed + bs002_suppressed + bs004_suppressed
-        # + bs007_suppressed
+        # + bs007_suppressed + bs008_suppressed
         # + the justification-less (still applied) one in bs000_bad_*
-        assert fixture_result.suppressed == 5
+        assert fixture_result.suppressed == 6
 
     def test_all_rules_ran(self, fixture_result):
         assert fixture_result.rules == (
-            "BS001", "BS002", "BS003", "BS004", "BS005", "BS006", "BS007")
+            "BS001", "BS002", "BS003", "BS004", "BS005", "BS006", "BS007",
+            "BS008")
         assert set(RULES) == set(fixture_result.rules)
 
 
@@ -182,7 +189,7 @@ class TestCli:
         assert lint_main([str(FIXTURES), "--json-out", str(out)]) == 1
         doc = json.loads(out.read_text())
         assert doc["version"] == 1 and doc["ok"] is False
-        assert len(doc["findings"]) == 29
+        assert len(doc["findings"]) == 34
         assert doc["rules"] == list(RULES)
         assert lint_main([str(SRC)]) == 0
         assert lint_main(["--list-rules"]) == 0

@@ -84,20 +84,46 @@ class TestBigStoreProps:
             np.testing.assert_array_equal(before[k][1], after[k][1])
 
 
-class TestVClockWindow:
+class TestVClockIntervals:
     @given(st.lists(st.integers(1, 127), min_size=1, max_size=30))
     @settings(max_examples=40, deadline=None)
-    def test_window_roundtrip_vs_sparse(self, counters):
+    def test_interval_roundtrip_vs_sparse(self, counters):
         sparse = Clock.zero().add_dots(Dot("x", c) for c in counters)
-        dense = vclock.from_clock(sparse, {"x": 0}, 1, 4)
+        dense = vclock.from_clock(sparse, {"x": 0}, 1)
         assert vclock.to_clock(dense, ["x"]) == sparse
-        c = vclock.compress(dense)
-        assert vclock.to_clock(c, ["x"]) == sparse  # compress is semantic no-op
+        # canonical form: one array slot per run, not per dot
+        assert dense.n_runs == sparse.n_runs()
 
     def test_subtract_matches_sparse(self):
         s1 = Clock.zero().add_dots(Dot("x", c) for c in (1, 2, 3, 5, 9))
         s2 = Clock.zero().add_dots(Dot("x", c) for c in (2, 9))
-        d1 = vclock.from_clock(s1, {"x": 0}, 1, 2)
-        d2 = vclock.from_clock(s2, {"x": 0}, 1, 2)
+        d1 = vclock.from_clock(s1, {"x": 0}, 1)
+        d2 = vclock.from_clock(s2, {"x": 0}, 1)
         diff = vclock.subtract(d1, d2)
         assert vclock.to_clock(diff, ["x"]) == s1.subtract([Dot("x", 2), Dot("x", 9)])
+
+    def test_subtract_origin_free_across_bases(self):
+        # Holes punched below either base — no alignment precondition.
+        s1 = Clock(base={"x": 50}).add_dots([Dot("x", 60)])
+        s2 = Clock(base={"x": 10}).add_dots(
+            [Dot("x", 20), Dot("x", 21), Dot("x", 60)])
+        d1 = vclock.from_clock(s1, {"x": 0}, 1)
+        d2 = vclock.from_clock(s2, {"x": 0}, 1)
+        diff = vclock.subtract(d1, d2)
+        assert vclock.to_clock(diff, ["x"]) == s1.subtract_clock(s2)
+        assert int(vclock.popcount(diff).sum()) == 50 - 10 - 2
+
+    def test_densify_100k_contiguous_is_o_runs(self):
+        """Regression: densifying a 100k-dot clock must not expand per dot.
+
+        The old bitmap path walked ``all_dots()`` in Python (100k iterations
+        and a 100k-bit window); the interval form carries one (lo, hi) pair
+        per run, so the dense arrays stay O(runs) no matter how many events
+        the clock covers.
+        """
+        big = Clock(base={"x": 100_000}).add_dots(
+            [Dot("x", 100_005), Dot("y", 7)])
+        dense = vclock.from_clock(big, {"x": 0, "y": 1}, 2)
+        assert dense.starts.size <= 4          # 2 actors x <=2 run slots
+        assert int(vclock.popcount(dense).sum()) == 100_002
+        assert vclock.to_clock(dense, ["x", "y"]) == big

@@ -295,6 +295,48 @@ class TestDurableStore:
         with pytest.raises(WalError):
             store.recover()                       # not a fresh store
 
+    def test_legacy_clock_payloads_roundtrip_through_recovery(self):
+        """``KIND_CLOCK`` records written by the pre-interval per-dot codec
+        replay through the WAL, decode, serve reads, and re-encode in the
+        run-length form on the next write."""
+        import msgpack
+
+        from repro.core.bigset import (BigsetVnode, clock_key, element_key,
+                                       tombstone_key)
+        from repro.core.clock import Clock
+        from repro.core.dots import Dot
+
+        # Pre-refactor replica state: set-clock base {a: 2} + cloud {4, 5}
+        # (gap at 3), tombstone cloud {4} — element y@(a,4) was removed.
+        legacy_clock = msgpack.packb({"b": [["a", 2]], "c": [["a", [4, 5]]]})
+        legacy_ts = msgpack.packb({"b": [], "c": [["a", [4]]]})
+        media = DurableMedia()
+        old = LsmStore(media=media)
+        old.put(clock_key(S), legacy_clock)
+        old.put(tombstone_key(S), legacy_ts)
+        old.put(element_key(S, b"x", Dot("a", 2)), b"")
+        old.put(element_key(S, b"z", Dot("a", 5)), b"")
+        old.sync()
+        media.crash()
+
+        store, res = fresh_recover(media)
+        assert res.batches_replayed == 4 and res.torn_bytes == 0
+        vn = BigsetVnode("b", store)
+        assert vn.value(S) == {b"x", b"z"}
+        clk = Clock.from_obj(msgpack.unpackb(store.get(clock_key(S)),
+                                             strict_map_key=False))
+        assert clk.seen(Dot("a", 5)) and not clk.seen(Dot("a", 3))
+
+        # a write through the recovered vnode upgrades the record in place
+        vn.coordinate_insert(S, b"w")
+        upgraded = msgpack.unpackb(store.get(clock_key(S)),
+                                   strict_map_key=False)
+        assert "r" in upgraded and "c" not in upgraded
+        store.sync()
+        media.crash()
+        store2, _ = fresh_recover(media)
+        assert BigsetVnode("b", store2).value(S) == {b"w", b"x", b"z"}
+
 
 # ------------------------------------------------------------------- cluster
 def run_writes(clusters, lo, hi, coordinators=(0, 1, 2)):

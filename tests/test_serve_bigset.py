@@ -311,9 +311,9 @@ class TestWritePath:
     def test_insert_returns_minted_dot(self):
         cluster, _, client, _ = make_service()
         dot = client.insert(S, b"x")
-        assert dot == ["vnode0", 1]
+        assert dot == ["vnode0", 1, 1]  # single dot rides as [actor, c, c]
         dot2 = client.insert(S, b"x")
-        assert dot2 == ["vnode0", 2]
+        assert dot2 == ["vnode0", 2, 2]
 
     def test_membership_ctx_round_trips_into_remove(self):
         cluster, _, client, _ = make_service()
@@ -332,7 +332,25 @@ class TestWritePath:
         client.remove(S, b"x", ctx=stale_ctx)
         present, ctx = client.membership(S, b"x")
         assert present  # add-wins: only the observed dot was removed
-        assert ctx == [["vnode0", 2]]
+        assert ctx == [["vnode0", 2, 2]]
+
+    def test_legacy_per_dot_ctx_still_decodes(self):
+        # pre-interval clients sent [[actor, counter], ...] — the service
+        # must keep honouring that alongside the run-triple form
+        cluster, _, client, _ = make_service()
+        client.insert(S, b"x")
+        assert client.remove(S, b"x", ctx=[["vnode0", 1]])
+        for actor in cluster.actors:
+            assert cluster.vnodes[actor].value(S) == set()
+
+    def test_contiguous_ctx_coalesces_on_the_wire(self):
+        # ten dots of one actor ship as a single run triple
+        cluster, _, client, _ = make_service()
+        for _ in range(10):
+            client.insert(S, b"x")
+        _, ctx = client.membership(S, b"x", r=3)
+        assert ctx == [["vnode0", 1, 10]]
+        assert client.remove(S, b"x", ctx=ctx)
 
     def test_batch_remove_observes_earlier_add(self):
         cluster, _, client, _ = make_service()

@@ -1,0 +1,154 @@
+"""Partitioned-placement economics: storage split, rebalance cost, coverage.
+
+The ring's three claims as a gating benchmark (docs/ARCHITECTURE.md
+§ placement & handoff, invariant 13):
+
+* **Storage partitions.**  At 8 vnodes / factor 3 each vnode stores
+  ~3/8 of what a full-replication member stores — gated against the
+  *measured* full-replication baseline, not a constant.
+* **Rebalance ships only moved partitions.**  `add_vnode` handoff
+  ships exactly the moved partitions' keys (O(moved data), zero folds
+  for unmoved partitions) and its wire bytes stay a minority share of
+  the full data set's replication traffic.
+* **Coverage reads touch only planned vnodes.**  A range query over a
+  coverage plan leaves every vnode outside the plan with zero read IO.
+
+Raises on any violation so the quick-bench CI job goes red; prints
+timing rows (the handoff-rounds row rides into ``--metrics-out``).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.cluster.clusters import BigsetCluster, Ring
+from repro.cluster.placement import plan_coverage
+from repro.query.plan import Range
+from repro.query.planner import side_stats
+
+S = b"bench"
+N_VNODES = 8
+FACTOR = 3
+
+
+def _fill(cluster: BigsetCluster, n: int) -> None:
+    for i in range(n):
+        cluster.add(S, b"el%06d" % i, value=b"v" * 16,
+                    coordinator=i % len(cluster.actors))
+
+
+def _per_vnode_bytes(cluster: BigsetCluster) -> List[int]:
+    out = []
+    for a in cluster.actors:
+        store = cluster.vnodes[a].store
+        out.append(sum(side_stats(store, pset).bytes
+                       for pset in cluster.ring.storage_sets(S)))
+    return out
+
+
+def run_placement(n: int) -> List[str]:
+    actors = [f"v{i}" for i in range(N_VNODES)]
+
+    # -------- storage split vs the measured full-replication baseline
+    full = BigsetCluster(ring=Ring.full(actors))
+    t0 = time.perf_counter()
+    _fill(full, n)
+    full_s = time.perf_counter() - t0
+    full_bytes = max(_per_vnode_bytes(full))
+
+    part = BigsetCluster(ring=Ring.build(actors, factor=FACTOR))
+    t0 = time.perf_counter()
+    _fill(part, n)
+    part_s = time.perf_counter() - t0
+    worst = max(_per_vnode_bytes(part))
+    ratio = worst / full_bytes
+    # ~3/8 of the full-replication footprint; 1.5x slack absorbs
+    # per-partition metadata (clock + tombstone + digest per pset) and
+    # rendezvous skew across 64 partitions
+    bound = FACTOR / N_VNODES * 1.5
+    if ratio > bound:
+        raise RuntimeError(
+            f"per-vnode storage {ratio:.2f}x of full replication "
+            f"(bound {bound:.2f}: factor {FACTOR} over {N_VNODES} vnodes)")
+
+    # -------- coverage reads leave unplanned vnodes cold
+    part.settle()  # drain in-flight replication before snapshotting IO
+    read_before = {a: part.vnodes[a].store.stats.bytes_read
+                   for a in part.actors}
+    res = part.query(Range(S, b"el", b"em", limit=200))
+    plan = plan_coverage(part.ring, S, live=list(part.actors),
+                         r=part.ring.write_quorum())
+    covered = set(plan.vnodes)
+    if f"vnodes={len(covered)}" not in res.stats.coverage:
+        raise RuntimeError(
+            f"query coverage {res.stats.coverage!r} disagrees with "
+            f"plan_coverage over {len(covered)} vnodes")
+    for a in part.actors:
+        delta = part.vnodes[a].store.stats.bytes_read - read_before[a]
+        if a not in covered and delta:
+            raise RuntimeError(
+                f"vnode {a} outside the coverage plan read {delta} bytes")
+
+    # -------- rebalance: handoff ships exactly the moved partitions
+    base_wire = part.net.bytes_sent  # replication traffic for n elements
+    moved_keys = 0
+    ae0 = part.ae_stats()
+    shipped0, rounds0 = ae0.keys_shipped, ae0.handoff_rounds
+    wire0 = part.net.bytes_sent
+    delta = part.add_vnode("v8")
+    for move in delta.moves:
+        pset = part.ring.storage_set(S, move.pid)
+        donor = (move.survivors() or move.old_owners)[0]
+        moved_keys += side_stats(part.vnodes[donor].store, pset).keys
+    t0 = time.perf_counter()
+    ticks = 0
+    while ticks < 200:
+        part.tick(budget=0)  # handoff engine only: no scheduled AE rounds
+        state = part.ring_state()
+        ticks += 1
+        if not state["handoffs_pending"] and not state["retires_pending"]:
+            break
+    else:
+        raise RuntimeError("handoff did not drain in 200 ticks")
+    handoff_s = time.perf_counter() - t0
+    ae = part.ae_stats()
+    shipped = ae.keys_shipped - shipped0
+    rounds = ae.handoff_rounds - rounds0
+    handoff_wire = part.net.bytes_sent - wire0
+    if shipped != moved_keys:
+        raise RuntimeError(
+            f"handoff shipped {shipped} keys for {moved_keys} moved")
+    # O(moved partitions): a ~22/64 rebalance must cost well under the
+    # traffic that replicated the full data set in the first place
+    if handoff_wire > base_wire // 2:
+        raise RuntimeError(
+            f"rebalance wire {handoff_wire}B vs {base_wire}B to load "
+            f"the set — not O(moved partitions)")
+    if part.ring_state()["serveable_epochs"] != [1]:
+        raise RuntimeError("old epoch failed to retire after handoff")
+
+    return [
+        f"placement/storage/{n},{part_s * 1e6 / n:.2f},"
+        f"worst_vnode_ratio={ratio:.3f};bound={bound:.3f};"
+        f"full_us_per_add={full_s * 1e6 / n:.2f}",
+        f"placement/coverage/{n},0,"
+        f"plan_vnodes={len(covered)};of={N_VNODES}",
+        f"placement/handoff/{n},{handoff_s * 1e6:.1f},"
+        f"handoff_rounds={rounds};keys_shipped={shipped};"
+        f"moved_pids={len(delta.moves)};ticks={ticks};"
+        f"wire_bytes={handoff_wire}",
+    ]
+
+
+def main(cards=(5000,), quick=False) -> List[str]:
+    if quick:
+        cards = (800,)
+    rows: List[str] = []
+    for n in cards:
+        rows.extend(run_placement(n))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

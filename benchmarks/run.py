@@ -20,16 +20,16 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: writes,reads,queries,joins,serve,"
-                         "antientropy,recovery,clock,mixed,ckpt,kernels,"
-                         "roofline,lint")
+                         "antientropy,recovery,placement,clock,mixed,ckpt,"
+                         "kernels,roofline,lint")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write a JSON metrics snapshot + rows to PATH")
     args = ap.parse_args(argv)
 
     from . import (bench_antientropy, bench_checkpoint, bench_clock,
                    bench_joins, bench_kernels, bench_lint, bench_mixed,
-                   bench_queries, bench_reads, bench_recovery, bench_serve,
-                   bench_writes, roofline)
+                   bench_placement, bench_queries, bench_reads,
+                   bench_recovery, bench_serve, bench_writes, roofline)
 
     sections = {
         "writes": lambda: bench_writes.main(quick=args.quick),     # Tab1/Fig1-3
@@ -41,6 +41,8 @@ def main(argv=None) -> None:
             lambda: bench_antientropy.main(quick=args.quick),      # §6 / AE
         "recovery":
             lambda: bench_recovery.main(quick=args.quick),         # WAL replay
+        "placement":
+            lambda: bench_placement.main(quick=args.quick),        # ring gate
         "clock": lambda: bench_clock.main(quick=args.quick),       # interval gate
         "mixed": lambda: bench_mixed.main(quick=args.quick),       # Fig6
         "ckpt": lambda: bench_checkpoint.main(quick=args.quick),   # framework

@@ -83,6 +83,16 @@ class LintConfig:
     #: it materialises only the actual divergence)
     dot_enumeration_calls: FrozenSet[str] = frozenset({"all_dots"})
 
+    # ----------------------------------------------------------- BS009 scope
+    #: the one module allowed to turn positions into vnode identities
+    placement_home: str = "cluster/placement.py"
+    #: collection names whose literal-int subscripts are placement
+    #: decisions (``self.vnodes[0]`` hardwires an owner the ring may move)
+    vnode_collections: FrozenSet[str] = frozenset(
+        {"vnodes", "actors", "stores"})
+    #: routing helpers that must not be fed literal vnode positions
+    vnode_route_calls: FrozenSet[str] = frozenset({"_actor", "_coordinator"})
+
     # ------------------------------------------------------------------ misc
     def runs(self, rule_id: str) -> bool:
         if rule_id in self.ignore:

@@ -9,7 +9,7 @@ from .base import META_RULE, RULES, Finding, Rule, register
 
 from . import (bs001_wallclock, bs002_billed_send, bs003_clock_mutation,
                bs004_bare_assert, bs005_query_folds, bs006_kernel_imports,
-               bs007_memtable_mutation,
-               bs008_dot_enumeration)  # noqa: F401 (import = registration)
+               bs007_memtable_mutation, bs008_dot_enumeration,
+               bs009_vnode_indexing)  # noqa: F401 (import = registration)
 
 __all__ = ["META_RULE", "RULES", "Finding", "Rule", "register"]

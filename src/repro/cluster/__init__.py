@@ -8,13 +8,21 @@ duplicate / reorder so convergence properties can be tested exhaustively.
 from .sim import DeliveryBudget, Network
 from .antientropy import AntiEntropyScheduler, AntiEntropyStats
 from .clusters import BigsetCluster, DeltaCluster, RiakSetCluster
+from .placement import (CoveragePlan, PreferenceList, Ring, RingDelta,
+                        VnodeDown, plan_coverage)
 
 __all__ = [
     "AntiEntropyScheduler",
     "AntiEntropyStats",
     "BigsetCluster",
+    "CoveragePlan",
     "DeliveryBudget",
     "DeltaCluster",
     "Network",
+    "PreferenceList",
     "RiakSetCluster",
+    "Ring",
+    "RingDelta",
+    "VnodeDown",
+    "plan_coverage",
 ]

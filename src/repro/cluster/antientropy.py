@@ -305,9 +305,68 @@ def full_sync(a: BigsetVnode, b: BigsetVnode, set_name: bytes) -> None:
 
 
 def handoff(src: BigsetVnode, dst: BigsetVnode, set_name: bytes) -> int:
-    """Transfer a set to a new owner (ring change): sync with empty clock."""
+    """Transfer a set to a new owner (ring change): sync with empty clock.
+
+    The full-fold baseline.  Scheduled ring-change handoff uses the
+    digest ladder instead (:class:`HandoffTask` pulls pumped by
+    ``BigsetCluster.tick``), which ships only what the new owner's clock
+    has not seen — for a fresh owner that is everything, but for a
+    crash-restarted or partially-caught-up owner it is the diverged tail.
+    """
     reply = build_reply(src, set_name, Clock.zero())
     return apply_reply(dst, reply)
+
+
+# ----------------------------------------------------------- ring handoff
+@dataclass
+class HandoffTask:
+    """One digest-ladder pull a ring change requires: ``dst`` (a gaining
+    owner) pulls partition-set ``pset`` from ``src`` (a surviving old
+    owner, or the leaver itself when nobody else holds the partition).
+
+    ``done`` flips once :func:`handoff_complete` proves domination — the
+    pull is re-scheduled every tick until then, so dropped request or
+    reply messages only delay completion, never lose it.
+    """
+
+    set_name: bytes   # logical set (for spans / stats attribution)
+    pset: bytes       # partition storage set being moved
+    pid: int
+    dst: str
+    src: str
+    done: bool = False
+
+
+@dataclass
+class RetireTask:
+    """Retire ``leaver``'s copy of ``pset`` once every vnode in
+    ``waits_on`` (the partition's gaining owners — or, when nobody
+    joined, its surviving owners) causally dominates the leaver.
+
+    Domination means the waiter's set-clock descends the leaver's: every
+    dot the leaver acknowledged is either a surviving key at the waiter
+    or was legitimately removed there — deleting the leaver's copy can
+    lose nothing (invariant 13).
+    """
+
+    set_name: bytes
+    pset: bytes
+    pid: int
+    leaver: str
+    waits_on: Tuple[str, ...]
+    done: bool = False
+
+
+def handoff_complete(src: BigsetVnode, dst: BigsetVnode,
+                     set_name: bytes) -> bool:
+    """Has ``dst`` causally caught up with ``src`` for ``set_name``?
+
+    Clock descent is the whole check: the digest ladder joins ``src``'s
+    set-clock into ``dst``'s with the reply, so descent certifies every
+    dot ``src`` ever acknowledged is accounted for at ``dst`` (present,
+    or removed by an observed remove).  O(causal metadata), no fold.
+    """
+    return dst.read_clock(set_name).descends(src.read_clock(set_name))
 
 
 # ------------------------------------------------------------- scheduling
@@ -333,6 +392,10 @@ class AntiEntropyStats:
     repair_misses: int = 0    # quorum checks where every replica had the dot
     repair_no_donor: int = 0  # repairs skipped: no replica could supply a value
     rounds_crashed: int = 0   # rounds not attempted: a member was crashed
+    handoff_rounds: int = 0   # ring-change digest pulls pumped by tick()
+    handoff_retired: int = 0  # partition copies retired after domination
+    hints_recorded: int = 0   # sloppy writes parked on a fallback vnode
+    hints_resolved: int = 0   # hints promoted to handoff pulls (owner back)
 
 
 class AntiEntropyScheduler:
@@ -357,14 +420,26 @@ class AntiEntropyScheduler:
         self._scores: Dict[Tuple[bytes, Tuple[str, str]], float] = {}
         self._sets: List[bytes] = []
         self._known: Set[bytes] = set()
+        # per-set owner lists (partitioned placement): a partition set only
+        # syncs among its preference list, never across the whole cluster
+        self._owners: Dict[bytes, Tuple[str, ...]] = {}
         self._rr = 0
 
     # ------------------------------------------------------------- signals
-    def note_set(self, set_name: bytes) -> None:
-        """Register a set for the round-robin baseline (cluster write path)."""
+    def note_set(self, set_name: bytes,
+                 owners: Optional[Iterable[str]] = None) -> None:
+        """Register a set for the round-robin baseline (cluster write path).
+
+        ``owners`` scopes the set's sync pairs to its preference list;
+        omitted (the full-replication default), every actor pair gossips
+        the set.  Re-noting with new owners (a ring change) re-scopes the
+        pairs, so retired owners stop being synced against.
+        """
         if set_name not in self._known:
             self._known.add(set_name)
             self._sets.append(set_name)
+        if owners is not None:
+            self._owners[set_name] = tuple(owners)
 
     def record_repair_hit(self, set_name: bytes, target: str,
                           donor: str) -> None:
@@ -392,6 +467,17 @@ class AntiEntropyScheduler:
             for b in self.actors[i + 1:]
         ]
 
+    def _pairs_for(self, set_name: bytes) -> List[Tuple[str, str]]:
+        owners = self._owners.get(set_name)
+        if owners is None:
+            return self._all_pairs()
+        owners = sorted(owners)
+        return [
+            (a, b)
+            for i, a in enumerate(owners)
+            for b in owners[i + 1:]
+        ]
+
     def hot_pairs(self) -> List[Tuple[bytes, Tuple[str, str], float]]:
         """(set, pair, score) above threshold, hottest first."""
         hot = [(k[0], k[1], s) for k, s in self._scores.items()
@@ -417,7 +503,7 @@ class AntiEntropyScheduler:
                 break
             rounds.append((set_name, pair[0], pair[1]))
             chosen.add((set_name, pair))
-        universe = [(s, p) for s in self._sets for p in self._all_pairs()]
+        universe = [(s, p) for s in self._sets for p in self._pairs_for(s)]
         for _ in range(len(universe)):
             if len(rounds) >= budget:
                 break

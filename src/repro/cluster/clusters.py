@@ -34,17 +34,22 @@ from ..query.executor import (QueryExecutor, QueryResult, QueryStats,
                               account_emitted, collect_index_page,
                               collect_page, gallop_join, index_resume_point,
                               stream_entries, zipper_join)
-from ..query.planner import GALLOP, choose_join, quorum_side_stats
+from ..query.planner import (GALLOP, SideStats, choose_join, side_stats,
+                             quorum_side_stats)
 from ..storage.lsm import LsmStore
 from ..storage.wal import DurableMedia, RecoveryResult
 from .antientropy import (AntiEntropyScheduler, AntiEntropyStats,
-                          SyncRequest, apply_digest_reply,
-                          build_digest_reply, survivors_digest)
+                          HandoffTask, RetireTask, SyncRequest,
+                          apply_digest_reply, build_digest_reply,
+                          handoff_complete, survivors_digest)
+from .placement import (CoveragePlan, PreferenceList, Ring, RingDelta,
+                        VnodeDown, plan_coverage)
 from .sim import Message, Network
 
-
-class VnodeDown(RuntimeError):
-    """An operation was routed to a crashed vnode (crash()ed, not restarted)."""
+__all__ = [
+    "BigsetCluster", "ClusterSession", "DeltaCluster", "RiakSetCluster",
+    "Ring", "VnodeDown",
+]
 
 
 # ------------------------------------------------------------ serve sessions
@@ -179,8 +184,8 @@ class RiakSetCluster(_ClusterBase):
         self._save(msg.dst, set_name, merged)      # write whole set
 
     def read(self, set_name: bytes, r: int = 1) -> Orswot:
-        acc = self._load(self.actors[0], set_name)
-        for a in self.actors[1:r]:
+        acc = Orswot.new()
+        for a in self.actors[:max(r, 1)]:
             acc = acc.merge(self._load(a, set_name))
         return acc
 
@@ -240,8 +245,29 @@ class BigsetCluster(_ClusterBase):
                  scheduler: Optional[AntiEntropyScheduler] = None,
                  tracer: Optional[Tracer] = None,
                  durable: bool = False, group_depth: int = 8,
-                 media: Optional[Dict[str, DurableMedia]] = None):
+                 media: Optional[Dict[str, DurableMedia]] = None,
+                 ring: Optional[Ring] = None):
         super().__init__(n_replicas, net, sync)
+        if ring is not None:
+            # the ring names the cluster: its actors become the vnodes
+            self.actors = list(ring.actors)
+            self.n = len(self.actors)
+        # degenerate default: one partition owned by everyone, storage
+        # passthrough — byte-identical to the pre-partitioning cluster
+        self.ring = ring if ring is not None else Ring.full(self.actors)
+        self._rings: Dict[int, Ring] = {self.ring.epoch: self.ring}
+        self._retired_epochs: Set[int] = set()
+        # logical sets the write path has touched (handoff planning input)
+        self._known_sets: Set[bytes] = set()
+        # sloppy placement bookkeeping: (pset, fallback, owner) -> hint
+        self._hints: Dict[Tuple[bytes, str, str],
+                          Tuple[bytes, bytes, int, str, str]] = {}
+        self._handoffs: List[HandoffTask] = []
+        self._retires: List[RetireTask] = []
+        # (old_epoch, handoff tasks, retire tasks): the old ring stays
+        # serveable for pinned cursors until its transition fully retires
+        self._transitions: List[Tuple[int, List[HandoffTask],
+                                      List[RetireTask]]] = []
         self.durable = durable or media is not None
         self.group_depth = group_depth
         if self.durable:
@@ -265,14 +291,122 @@ class BigsetCluster(_ClusterBase):
         # payloads and records no spans (zero behavior change, invariant 10)
         self.tracer = tracer or NULL_TRACER
 
+    # ---------------------------------------------------------- ring access
+    def ring_for(self, epoch: Optional[int]) -> Ring:
+        """The ring at ``epoch``, or the current ring when ``epoch`` is
+        None, unknown, or already retired (handoff moved its data away).
+
+        Cursor leases pin the epoch their plan ran under; falling forward
+        to the current ring is safe because cursors are element
+        boundaries — placement-agnostic — so a resumed page re-plans
+        coverage under the live ring and continues from the same element.
+        """
+        if epoch is None or epoch in self._retired_epochs:
+            return self.ring
+        return self._rings.get(epoch, self.ring)
+
+    def ring_state(self) -> Dict[str, object]:
+        """Ring observability snapshot (the serve layer's ``stats`` op)."""
+        return {
+            "epoch": self.ring.epoch,
+            "factor": self.ring.factor,
+            "n_partitions": self.ring.n_partitions,
+            "actors": list(self.ring.actors),
+            "full_replication": self.ring.full_replication,
+            "serveable_epochs": sorted(
+                e for e in self._rings if e not in self._retired_epochs),
+            "handoffs_pending": sum(1 for t in self._handoffs if not t.done),
+            "retires_pending": sum(1 for t in self._retires if not t.done),
+            "hints_pending": len(self._hints),
+        }
+
+    def _note_set(self, set_name: bytes, pref: PreferenceList,
+                  pset: bytes) -> None:
+        self._known_sets.add(set_name)
+        if self.ring.full_replication:
+            self.scheduler.note_set(pset)
+        else:
+            self.scheduler.note_set(pset, owners=pref.owners)
+
+    def _route_write(self, entry: str, set_name: bytes,
+                     pref: PreferenceList) -> Tuple[str, List[str]]:
+        """Owner-routed write placement for one partition.
+
+        Returns ``(coordinator, replication targets)``.  The coordinator
+        is the client's entry vnode when it owns the partition, else the
+        first live owner (clients route by the shared ring, so this hop
+        is placement math, not a billed message).  Targets are every
+        owner — crashed ones included, their messages drop in the
+        blackholed network exactly as before partitioning — plus one
+        *sloppy* fallback per crashed owner, with a hint recorded so the
+        fallback's copy is handed to the owner when it returns.
+        """
+        live = [a for a in pref.owners if a not in self.crashed]
+        down = [a for a in pref.owners if a in self.crashed]
+        targets = list(pref.owners)
+        fallbacks = iter(
+            a for a in pref.fallbacks
+            if a not in self.crashed and a not in targets)
+        sloppy: List[str] = []
+        hinted: List[Tuple[str, str]] = []
+        for owner in down:
+            fb = next(fallbacks, None)
+            if fb is None:
+                break
+            targets.append(fb)
+            sloppy.append(fb)
+            hinted.append((fb, owner))
+        if (not self.ring.full_replication
+                and len(live) + len(sloppy) < self.ring.write_quorum()):
+            # invariant 13: acknowledged ⇒ durable on a write-quorum of
+            # the preference list.  Too few live owners and no fallbacks
+            # left to park hints on — refuse loudly rather than ack a
+            # write that a single further failure could erase.
+            raise VnodeDown(
+                f"write quorum unreachable for partition {pref.pid} of "
+                f"{set_name!r}: {len(live)} live of {pref.owners}, "
+                f"{len(sloppy)} fallbacks", vnode=down[0], set_name=set_name)
+        for fb, owner in hinted:
+            self._record_hint(set_name, pref, fb, owner)
+        if entry in live:
+            coordinator = entry
+        elif live:
+            coordinator = live[0]
+        elif sloppy:
+            coordinator = sloppy[0]
+        else:
+            raise VnodeDown(
+                f"no live owner or fallback for partition {pref.pid} of "
+                f"{set_name!r} ({pref.owners} crashed)",
+                vnode=pref.owners[0], set_name=set_name)
+        return coordinator, targets
+
+    def _record_hint(self, set_name: bytes, pref: PreferenceList,
+                     fallback: str, owner: str) -> None:
+        pset = self.ring.storage_set(set_name, pref.pid)
+        key = (pset, fallback, owner)
+        if key not in self._hints:
+            self._hints[key] = (set_name, pset, pref.pid, fallback, owner)
+            self.scheduler.stats.hints_recorded += 1
+
+    def _replicate_to(self, src: str, targets: Iterable[str], payload,
+                      size: int) -> None:
+        for a in targets:
+            if a != src:
+                self.net.send(src, a, payload, size)
+        if self.sync:
+            self.net.deliver_all(self._handle)
+
     # ------------------------------------------------------- crash / restart
     def _actor(self, vnode) -> str:
         return self.actors[vnode] if isinstance(vnode, int) else vnode
 
-    def _coordinator(self, coordinator: int) -> str:
-        actor = self.actors[coordinator]
+    def _coordinator(self, coordinator: int,
+                     set_name: Optional[bytes] = None) -> str:
+        actor = self._actor(coordinator)
         if actor in self.crashed:
-            raise VnodeDown(f"{actor} is crashed")
+            raise VnodeDown(f"{actor} is crashed", vnode=actor,
+                            set_name=set_name)
         return actor
 
     def crash(self, vnode) -> None:
@@ -314,8 +448,9 @@ class BigsetCluster(_ClusterBase):
                    torn_bytes=rec.torn_bytes)
         vn = BigsetVnode(actor, store=store)
         for set_name, specs in self._index_specs.items():
-            for spec in specs.values():
-                vn.register_index(set_name, spec, backfill=False)
+            for pset in self.ring.storage_sets(set_name):
+                for spec in specs.values():
+                    vn.register_index(pset, spec, backfill=False)
         self.vnodes[actor] = vn
         self.net.heal(actor)
         self.crashed.discard(actor)
@@ -341,15 +476,23 @@ class BigsetCluster(_ClusterBase):
         The delta's ``dot`` is the insert's causal identity — the serve
         layer round-trips it to clients as the context for a later remove
         or replacing add.
+
+        Routing: the element's partition names its preference list; the
+        write coordinates at an owner (the requested vnode when it owns
+        the partition) and replicates to the other owners — plus sloppy
+        fallbacks, hint recorded, for any crashed owner.
         """
-        actor = self._coordinator(coordinator)
-        self.scheduler.note_set(set_name)
+        entry = self._coordinator(coordinator, set_name)
+        pref = self.ring.preference_list(set_name, element)
+        pset = self.ring.storage_set(set_name, pref.pid)
+        self._note_set(set_name, pref, pset)
+        actor, targets = self._route_write(entry, set_name, pref)
         with self.tracer.span("cluster.insert", set_name=set_name,
                               actor=actor) as sp:
             delta = self.vnodes[actor].coordinate_insert(
-                set_name, element, ctx, value=value)
-            self._replicate(actor, self._traced(sp, delta),
-                            delta.size_bytes())
+                pset, element, ctx, value=value)
+            self._replicate_to(actor, targets, self._traced(sp, delta),
+                               delta.size_bytes())
         if session is not None:
             session.observe_mutation(delta)
         return delta
@@ -357,11 +500,15 @@ class BigsetCluster(_ClusterBase):
     def register_index(self, set_name: bytes, spec: IndexSpec,
                        backfill: bool = True) -> int:
         """Register a secondary index on every replica (extractors must run
-        identically downstream).  Returns total backfill postings written.
-        The spec is remembered so a restarted vnode re-registers it."""
+        identically downstream — including on vnodes that only ever see a
+        partition via sloppy placement or a later ring change, so the spec
+        lands on every vnode for every partition of the set).  Returns
+        total backfill postings written.  The spec is remembered so a
+        restarted or newly joined vnode re-registers it."""
         self._index_specs.setdefault(set_name, {})[spec.name] = spec
         return sum(
-            vn.register_index(set_name, spec, backfill=backfill)
+            vn.register_index(pset, spec, backfill=backfill)
+            for pset in self.ring.storage_sets(set_name)
             for vn in self.vnodes.values())
 
     def remove(self, set_name: bytes, element: bytes, coordinator: int = 0,
@@ -370,20 +517,28 @@ class BigsetCluster(_ClusterBase):
                ) -> Optional[RemoveDelta]:
         """Observed-remove: ctx defaults to a local membership probe (§4.3.2
         — "the client **must** provide a context for a remove").  Returns
-        the shipped delta, or None when there was nothing to remove."""
-        actor = self._coordinator(coordinator)
+        the shipped delta, or None when there was nothing to remove.
+
+        Routed like :meth:`add`: the probe and the clock-only write both
+        happen at an owner of the element's partition, so the context dots
+        and the tombstone live in the same partition clock domain.
+        """
+        entry = self._coordinator(coordinator, set_name)
+        pref = self.ring.preference_list(set_name, element)
+        pset = self.ring.storage_set(set_name, pref.pid)
+        self._note_set(set_name, pref, pset)
+        actor, targets = self._route_write(entry, set_name, pref)
         vn = self.vnodes[actor]
-        self.scheduler.note_set(set_name)
         if ctx is None:
-            _, ctx = vn.is_member(set_name, element)
+            _, ctx = vn.is_member(pset, element)
         ctx = tuple(ctx)
         if not ctx:
             return None
         with self.tracer.span("cluster.remove", set_name=set_name,
                               actor=actor) as sp:
-            delta = vn.coordinate_remove(set_name, ctx)
-            self._replicate(actor, self._traced(sp, delta),
-                            delta.size_bytes())
+            delta = vn.coordinate_remove(pset, ctx)
+            self._replicate_to(actor, targets, self._traced(sp, delta),
+                               delta.size_bytes())
         if session is not None:
             session.observe_mutation(delta)
         return delta
@@ -436,71 +591,123 @@ class BigsetCluster(_ClusterBase):
             payload(vn)
 
     def read(self, set_name: bytes, r: int = 1) -> Orswot:
-        streams = []
-        for a in self.actors[:r]:
-            rs = self.vnodes[a].read(set_name)
-            streams.append((rs.clock, rs.entries()))
-        return quorum_read(streams)
+        if self.ring.full_replication:
+            streams = []
+            for a in self.actors[:r]:
+                rs = self.vnodes[a].read(set_name)
+                streams.append((rs.clock, rs.entries()))
+            return quorum_read(streams)
+        live = [a for a in self.actors if a not in self.crashed]
+        cover = plan_coverage(self.ring, set_name, live, r)
+        clock = Clock.zero()
+        entries: Dict[bytes, frozenset] = {}
+        for _pid, pset, actors in cover.assignments:
+            streams = []
+            for a in actors:
+                rs = self.vnodes[a].read(pset)
+                streams.append((rs.clock, rs.entries()))
+            part = quorum_read(streams)
+            # partitions have disjoint elements and independent clock
+            # domains; the joined clock is a membership-only view, never a
+            # causal context (each entry's dots stay partition-scoped)
+            clock = clock.join(part.clock)
+            entries.update(part.entries)
+        return Orswot(clock, entries)
 
     def value(self, set_name: bytes, r: int = 1):
         return self.read(set_name, r).value()
 
     # -------------------------------------------------------------- queries
-    def query(self, plan, r: Optional[int] = None, repair: bool = True,
-              session: Optional[ClusterSession] = None) -> QueryResult:
-        """Coverage-query path: scatter a plan to ``r`` replicas, stream the
-        partial results through a quorum merge, and read-repair stragglers.
+    def _covers(self, plan, ring: Ring, r: int) -> List[CoveragePlan]:
+        """Coverage plans the query needs: one per logical set touched.
 
-        Each replica contributes a lazy visible-entry stream (a storage seek
-        + bounded scan, §4.4); the merge is the streaming ORSWOT join of
+        Membership covers only the element's own partition; range-shaped
+        plans cover every partition of the set; joins cover both sides.
+        """
+        live = [a for a in self.actors if a not in self.crashed]
+        if isinstance(plan, query_plan.Membership):
+            pid = ring.partition(plan.set_name, plan.element)
+            return [plan_coverage(ring, plan.set_name, live, r, pids=[pid])]
+        if isinstance(plan, query_plan.Join):
+            return [plan_coverage(ring, plan.left, live, r),
+                    plan_coverage(ring, plan.right, live, r)]
+        return [plan_coverage(ring, plan.set_name, live, r)]
+
+    @staticmethod
+    def _cover_vnodes(covers: Sequence[CoveragePlan]) -> List[str]:
+        """Union of covered vnodes, first-appearance order (meter order)."""
+        seen: List[str] = []
+        for cover in covers:
+            for _pid, _pset, actors in cover.assignments:
+                for a in actors:
+                    if a not in seen:
+                        seen.append(a)
+        return seen
+
+    def query(self, plan, r: Optional[int] = None, repair: bool = True,
+              session: Optional[ClusterSession] = None,
+              ring_epoch: Optional[int] = None) -> QueryResult:
+        """Coverage-query path: plan a minimal covering set over the ring's
+        partition owners, stream each partition through an ``r``-replica
+        quorum merge, and read-repair stragglers.
+
+        Each covered replica contributes a lazy visible-entry stream (a
+        storage seek + bounded scan, §4.4) for each partition it owns; the
+        per-partition merge is the streaming ORSWOT join of
         :mod:`repro.core.streaming` with per-replica dot attribution so any
         replica missing a surviving dot gets the element-key delta replayed
         to it (read repair) — anti-entropy rides on the query workload.
-        ``r`` defaults to a majority quorum.  A ``session``
+        Partition streams fan in by element order, so results are
+        byte-identical to an unpartitioned cluster.  ``r`` defaults to a
+        majority of the replication factor.  ``ring_epoch`` pins the ring a
+        cursor's plan ran under (cursor leases); a retired epoch falls
+        forward to the current ring — cursors are element boundaries, so
+        they resume under any ring.  A ``session``
         (:class:`ClusterSession`) observes the result post-accounting — the
         serve layer's backpressure budget hangs off this hook.
         """
         query_plan.validate(plan)
+        ring = self.ring_for(ring_epoch)
         if r is None:
-            r = self.n // 2 + 1
+            r = ring.write_quorum()
         # coverage planning routes around crashed replicas: a non-quorum
         # crash leaves reads fully available (restart-under-traffic)
-        live = [a for a in self.actors if a not in self.crashed]
-        if len(live) < r:
-            raise VnodeDown(
-                f"need {r} replicas, {len(live)} live ({sorted(self.crashed)}"
-                " crashed)")
-        actors = live[:r]
+        covers = self._covers(plan, ring, r)
+        vnode_order = self._cover_vnodes(covers)
         tr = self.tracer
         with tr.span("cluster.query", plan=type(plan).__name__,
                      set_name=getattr(plan, "set_name", b""), r=r) as qspan:
-            meters = [self.vnodes[a].store.meter() for a in actors]
-            # coverage sub-spans opened per quorum replica BEFORE execution
+            meters = [self.vnodes[a].store.meter() for a in vnode_order]
+            # coverage sub-spans opened per covered replica BEFORE execution
             # (their storage children get the replica's IoStats delta after)
             rspans = ([tr.start("replica.coverage", parent=qspan.context(),
-                                actor=a) for a in actors]
+                                actor=a) for a in vnode_order]
                       if tr.enabled else None)
             if isinstance(plan, query_plan.Membership):
-                res = self._q_membership(plan, actors, repair)
+                res = self._q_membership(plan, covers[0], repair)
             elif isinstance(plan, query_plan.Range):
                 res = self._q_range(
-                    plan.set_name, plan.start, plan.end, plan.limit,
-                    plan.cursor, query_plan.cursor_scope(plan), actors,
+                    plan.start, plan.end, plan.limit,
+                    plan.cursor, query_plan.cursor_scope(plan), covers[0],
                     repair)
             elif isinstance(plan, query_plan.Scan):
                 res = self._q_range(
-                    plan.set_name, None, None, plan.page_size,
-                    plan.cursor, query_plan.cursor_scope(plan), actors,
+                    None, None, plan.page_size,
+                    plan.cursor, query_plan.cursor_scope(plan), covers[0],
                     repair)
             elif isinstance(plan, query_plan.Count):
-                res = self._q_count(plan, actors, repair)
+                res = self._q_count(plan, covers[0], repair)
             elif isinstance(plan, query_plan.Join):
-                res = self._q_join(plan, actors, repair)
+                res = self._q_join(plan, ring, covers, repair)
             elif isinstance(plan,
                             (query_plan.IndexLookup, query_plan.IndexRange)):
-                res = self._q_index(plan, actors, repair)
+                res = self._q_index(plan, covers[0], repair)
             else:  # pragma: no cover - validate() rejects
                 raise query_plan.PlanError(type(plan).__name__)
+            res.stats.coverage = (
+                f"epoch={ring.epoch};"
+                f"partitions={sum(len(c.assignments) for c in covers)};"
+                f"vnodes={len(vnode_order)};r={r}")
             for i, m in enumerate(meters):
                 io = m.delta()
                 res.stats.bytes_read += io.bytes_read
@@ -589,8 +796,12 @@ class BigsetCluster(_ClusterBase):
         if sent and self.sync:
             self.net.deliver_all(self._handle)
 
-    def _q_membership(self, plan, actors, repair) -> QueryResult:
-        probes = [ex.execute(plan) for ex in self._executors(actors)]
+    def _q_membership(self, plan, cover: CoveragePlan, repair) -> QueryResult:
+        # membership touches exactly one partition: the element's own
+        _pid, pset, actors = cover.assignments[0]
+        probe_plan = (plan if pset == plan.set_name else
+                      query_plan.Membership(pset, plan.element))
+        probes = [ex.execute(probe_plan) for ex in self._executors(actors)]
         clocks = [p.clock for p in probes]
         res_stats = QueryStats(
             keys_scanned=sum(p.stats.keys_scanned for p in probes),
@@ -607,9 +818,29 @@ class BigsetCluster(_ClusterBase):
         if present:
             res.entries = [(plan.element, dots)]
             if repair:
-                self._repair(plan.set_name, plan.element, dots, per_stream,
+                self._repair(pset, plan.element, dots, per_stream,
                              clocks, actors)
         return res
+
+    def _fan_stream(self, cover: CoveragePlan, start, end, after, repair,
+                    stats: QueryStats):
+        """One element-ordered stream over every covered partition.
+
+        A single partition (the full-replication ring) returns the
+        partition's quorum stream directly — the exact pre-partitioning
+        object graph.  Multiple partitions fan in by head element;
+        partitions split elements disjointly, so the k-way merge needs no
+        cross-stream dedup and each element's quorum merge still happens
+        entirely inside its own partition clock domain.
+        """
+        streams = [
+            self._quorum_stream(pset, actors, start, end, after, repair,
+                                stats=stats)
+            for _pid, pset, actors in cover.assignments
+        ]
+        if len(streams) == 1:
+            return streams[0]
+        return _FanInStream(streams)
 
     def _quorum_stream(self, set_name, actors, start, end, after, repair,
                        stats: Optional[QueryStats] = None) -> "_QuorumStream":
@@ -625,23 +856,22 @@ class BigsetCluster(_ClusterBase):
             if repair else None)
         return _QuorumStream(streams, clocks, repair_fn)
 
-    def _q_range(self, set_name, start, end, limit, cursor, scope, actors,
-                 repair) -> QueryResult:
+    def _q_range(self, start, end, limit, cursor, scope, cover, repair
+                 ) -> QueryResult:
         resume_start, after = query_cursor.resume_point(cursor, scope)
         if resume_start is not None:
             start = resume_start
         res = QueryResult()
-        merged = self._quorum_stream(set_name, actors, start, end, after,
-                                     repair, stats=res.stats)
+        merged = self._fan_stream(cover, start, end, after, repair,
+                                  stats=res.stats)
         res.clock = merged.clock
         collect_page(stream_entries(merged), limit, scope, res)
         return res
 
-    def _q_count(self, plan, actors, repair) -> QueryResult:
+    def _q_count(self, plan, cover, repair) -> QueryResult:
         res = QueryResult()
-        merged = self._quorum_stream(
-            plan.set_name, actors, plan.start, plan.end, None, repair,
-            stats=res.stats)
+        merged = self._fan_stream(cover, plan.start, plan.end, None, repair,
+                                  stats=res.stats)
         res.clock = merged.clock
         n = 0
         while merged.advance() is not None:
@@ -649,78 +879,136 @@ class BigsetCluster(_ClusterBase):
         res.count = n
         return res
 
-    def _q_index(self, plan, actors, repair) -> QueryResult:
+    def _index_quorum_stream(self, plan, pset, actors, at, after, repair,
+                             res: QueryResult) -> "_QuorumStream":
+        start, end = query_plan.index_span(plan)
+        streams = [
+            ex.index_stream(pset, plan.index, start=start, end=end,
+                            at=at, after=after, stats=res.stats)
+            for ex in self._executors(actors)
+        ]
+        clocks = [self.vnodes[a].read_clock(pset) for a in actors]
+        repair_fn = (
+            (lambda pos, dots, per: self._repair(
+                pset, pos[1], dots, per, clocks, actors))
+            if repair else None)
+
+        def absent_fn(i, pos):
+            ds = self.vnodes[actors[i]].is_member(pset, pos[1])[1]
+            return frozenset(ds) if ds else None
+
+        return _QuorumStream(streams, clocks, repair_fn, absent_fn)
+
+    def _q_index(self, plan, cover, repair) -> QueryResult:
         """Quorum-merged index query.
 
-        Each replica contributes its visible posting-group stream; the merge
-        is the same streaming ORSWOT rule as element ranges, keyed by
-        ``(index_key, element)``.  A replica missing a surviving element
-        gets the element-key delta replayed (read repair) — downstream
+        Each covered replica contributes its partition's visible
+        posting-group stream; the per-partition merge is the same
+        streaming ORSWOT rule as element ranges, keyed by
+        ``(index_key, element)``, and partitions fan in by that same key
+        (postings scatter across partitions with their elements, so every
+        partition must be covered — the index key says nothing about the
+        element hash).  A replica missing a surviving element gets the
+        element-key delta replayed (read repair) — downstream
         ``replica_insert`` re-derives the postings from the delta, so index
         repair is the ordinary write path, not a second protocol.
         """
         scope = query_plan.cursor_scope(plan)
-        start, end = query_plan.index_span(plan)
         at, after = index_resume_point(plan.cursor, scope)
         res = QueryResult(index_entries=[])
         if isinstance(plan, query_plan.IndexLookup):
-            # one probe per replica, matching the quorum membership path
-            res.stats.keys_probed += len(actors)
+            # one probe per covered replica stream, matching the quorum
+            # membership path
+            res.stats.keys_probed += sum(
+                len(actors) for _pid, _pset, actors in cover.assignments)
         streams = [
-            ex.index_stream(plan.set_name, plan.index, start=start, end=end,
-                            at=at, after=after, stats=res.stats)
-            for ex in self._executors(actors)
+            self._index_quorum_stream(plan, pset, actors, at, after, repair,
+                                      res)
+            for _pid, pset, actors in cover.assignments
         ]
-        clocks = [self.vnodes[a].read_clock(plan.set_name) for a in actors]
-        repair_fn = (
-            (lambda pos, dots, per: self._repair(
-                plan.set_name, pos[1], dots, per, clocks, actors))
-            if repair else None)
-
-        def absent_fn(i, pos):
-            ds = self.vnodes[actors[i]].is_member(plan.set_name, pos[1])[1]
-            return frozenset(ds) if ds else None
-
-        merged = _QuorumStream(streams, clocks, repair_fn, absent_fn)
+        merged = streams[0] if len(streams) == 1 else _FanInStream(streams)
         res.clock = merged.clock
         collect_index_page(merged, plan.limit, scope, res)
         return res
 
-    def _q_join(self, plan, actors, repair) -> QueryResult:
+    def _cover_side_stats(self, cover: CoveragePlan) -> SideStats:
+        """One join side's size across its covered partition replicas.
+
+        Sums preserve the left:right skew ratio the cost model compares,
+        exactly as :func:`~repro.query.planner.quorum_side_stats` did for
+        full replication (of which this is the one-partition special
+        case)."""
+        keys = nbytes = 0
+        for _pid, pset, actors in cover.assignments:
+            for a in actors:
+                s = side_stats(self.vnodes[a].store, pset)
+                keys += s.keys
+                nbytes += s.bytes
+        return SideStats(keys=keys, bytes=nbytes)
+
+    def _fan_probe(self, set_name: bytes, ring: Ring, cover: CoveragePlan,
+                   repair, stats: QueryStats):
+        """Partition-routed point probe for gallop joins.
+
+        Builds one quorum probe per covered partition; ``probe(element)``
+        routes to the element's partition, so each probe is the same
+        bounded-seek quorum merge it was under full replication.  Returns
+        ``(probe, joined clock)``.
+        """
+        by_pid = {}
+        clock = Clock.zero()
+        for pid, pset, actors in cover.assignments:
+            fn, pclock = self._quorum_probe(pset, actors, repair, stats)
+            by_pid[pid] = fn
+            clock = clock.join(pclock)
+
+        def probe(element):
+            return by_pid[ring.partition(set_name, element)](element)
+
+        return probe, clock
+
+    def _q_join(self, plan, ring: Ring, covers, repair) -> QueryResult:
         """Quorum-merged cross-set join, strategy chosen by the planner.
 
-        Statistics aggregate each side's element range across the quorum's
-        stores (the skew ratio is what the cost model compares).  A gallop
-        drives the smaller side's quorum stream and probes the larger side
-        replica-by-replica through the same ORSWOT merge rule — probed
-        elements still get read repair, so galloping trades only the
-        *incidental* repair of skipped non-matches, never correctness.
+        Statistics aggregate each side's element range across its covered
+        partition replicas (the skew ratio is what the cost model
+        compares).  A gallop drives the smaller side's fan-in stream and
+        probes the larger side partition-by-partition through the same
+        ORSWOT merge rule — probed elements still get read repair, so
+        galloping trades only the *incidental* repair of skipped
+        non-matches, never correctness.
         """
+        cover_l, cover_r = covers
         scope = query_plan.cursor_scope(plan)
         start, after = query_cursor.resume_point(plan.cursor, scope)
         res = QueryResult()
-        stores = [self.vnodes[a].store for a in actors]
         choice = choose_join(
             plan.kind,
-            quorum_side_stats(stores, plan.left),
-            quorum_side_stats(stores, plan.right),
+            self._cover_side_stats(cover_l),
+            self._cover_side_stats(cover_r),
             forced=plan.strategy)
         res.stats.strategy = choice.strategy
         if choice.strategy == GALLOP:
-            drive_name, probe_name = (
-                (plan.left, plan.right) if choice.drive == "left"
-                else (plan.right, plan.left))
-            drive = self._quorum_stream(drive_name, actors, start, None,
-                                        after, repair, stats=res.stats)
-            probe, probe_clock = self._quorum_probe(
-                probe_name, actors, repair, res.stats)
+            drive_name, drive_cover, probe_name, probe_cover = (
+                (plan.left, cover_l, plan.right, cover_r)
+                if choice.drive == "left"
+                else (plan.right, cover_r, plan.left, cover_l))
+            drive = self._fan_stream(drive_cover, start, None, after, repair,
+                                     stats=res.stats)
+            if len(probe_cover.assignments) == 1:
+                _pid, pset, actors = probe_cover.assignments[0]
+                probe, probe_clock = self._quorum_probe(
+                    pset, actors, repair, res.stats)
+            else:
+                probe, probe_clock = self._fan_probe(
+                    probe_name, ring, probe_cover, repair, res.stats)
             res.clock = drive.clock.join(probe_clock)
             entries = gallop_join(plan.kind, drive, probe, choice.drive)
         else:
-            left = self._quorum_stream(plan.left, actors, start, None, after,
-                                       repair, stats=res.stats)
-            right = self._quorum_stream(plan.right, actors, start, None,
-                                        after, repair, stats=res.stats)
+            left = self._fan_stream(cover_l, start, None, after, repair,
+                                    stats=res.stats)
+            right = self._fan_stream(cover_r, start, None, after, repair,
+                                     stats=res.stats)
             res.clock = left.clock.join(right.clock)
             entries = zipper_join(plan.kind, left, right)
         collect_page(entries, plan.limit, scope, res)
@@ -758,17 +1046,171 @@ class BigsetCluster(_ClusterBase):
 
         return probe, clock
 
+    # ------------------------------------------------------------- handoff
+    def add_vnode(self, name: Optional[str] = None) -> RingDelta:
+        """Join a vnode: mint the next ring epoch and schedule digest
+        handoff.
+
+        The returned :class:`RingDelta` names exactly the partitions whose
+        ownership moved; each gets a :class:`HandoffTask` per gaining
+        owner (digest-ladder pulls pumped by :meth:`tick`) and a
+        :class:`RetireTask` per leaving owner (its copy deleted only after
+        every gaining owner's clock dominates — invariant 13).  Unmoved
+        partitions are untouched: no tasks, no folds, no wire bytes.  The
+        old epoch stays serveable for pinned cursors until its transition
+        fully retires.
+        """
+        name = name or f"vnode{len(self.actors)}"
+        if name in self.actors:
+            raise ValueError(f"{name} already in the ring")
+        if self.durable:
+            self.media[name] = DurableMedia()
+            vn = BigsetVnode(name, store=LsmStore(
+                media=self.media[name], group_depth=self.group_depth))
+        else:
+            vn = BigsetVnode(name)
+        self.vnodes[name] = vn
+        self.actors.append(name)
+        self.n = len(self.actors)
+        self.scheduler.actors.append(name)
+        old = self.ring
+        new = old.with_actors(self.actors)
+        self.ring = new
+        self._rings[new.epoch] = new
+        delta = old.delta_to(new)
+        # the newcomer runs every known extractor before any data arrives,
+        # so handed-off element deltas derive postings identically
+        for set_name, specs in self._index_specs.items():
+            for pset in new.storage_sets(set_name):
+                for spec in specs.values():
+                    vn.register_index(pset, spec, backfill=False)
+        handoffs: List[HandoffTask] = []
+        retires: List[RetireTask] = []
+        for move in delta.moves:
+            donors = move.survivors() or move.old_owners
+            for set_name in sorted(self._known_sets):
+                pset = new.storage_set(set_name, move.pid)
+                for dst in move.joined:
+                    handoffs.append(HandoffTask(
+                        set_name, pset, move.pid, dst=dst, src=donors[0]))
+                for leaver in move.left:
+                    retires.append(RetireTask(
+                        set_name, pset, move.pid, leaver=leaver,
+                        waits_on=move.joined or move.new_owners))
+                if not new.full_replication:
+                    # re-scope the sync baseline to the new preference list
+                    self.scheduler.note_set(pset, owners=move.new_owners)
+        self._handoffs.extend(handoffs)
+        self._retires.extend(retires)
+        self._transitions.append((old.epoch, handoffs, retires))
+        return delta
+
+    def _promote_hints(self) -> None:
+        """Hinted handoff: when a crashed owner returns, its sloppy
+        fallback becomes a handoff donor and its copy a retire candidate."""
+        for key in list(self._hints):
+            pset, fallback, owner = key
+            if owner in self.crashed or fallback in self.crashed:
+                continue
+            set_name, _pset, pid, _fb, _ow = self._hints.pop(key)
+            self._handoffs.append(HandoffTask(
+                set_name, pset, pid, dst=owner, src=fallback))
+            self.scheduler.stats.hints_resolved += 1
+            self._add_fallback_retire(set_name, pset, pid, fallback, owner)
+
+    def _add_fallback_retire(self, set_name: bytes, pset: bytes, pid: int,
+                             fallback: str, owner: str) -> None:
+        if fallback in self.ring.owners(pid):
+            return  # became a real owner meanwhile: its copy is not surplus
+        for rt in self._retires:
+            if rt.pset == pset and rt.leaver == fallback and not rt.done:
+                if owner not in rt.waits_on:
+                    rt.waits_on = rt.waits_on + (owner,)
+                return
+        self._retires.append(RetireTask(
+            set_name, pset, pid, leaver=fallback, waits_on=(owner,)))
+
+    def _tick_handoff(self) -> int:
+        """Pump ring-change handoff: promote resolved hints, drive pending
+        digest pulls, retire dominated copies, close finished transitions.
+
+        Each pending task costs one digest pull per tick until the
+        destination's clock descends the source's — dropped messages delay
+        completion but can never fake it (:func:`handoff_complete`).
+        """
+        self._promote_hints()
+        tr = self.tracer
+        started = 0
+        pumped: List[HandoffTask] = []
+        for t in self._handoffs:
+            if t.done:
+                continue
+            if t.src in self.crashed or t.dst in self.crashed:
+                continue
+            if handoff_complete(self.vnodes[t.src], self.vnodes[t.dst],
+                                t.pset):
+                t.done = True
+                continue
+            with tr.span("handoff.round", set_name=t.set_name, pset=t.pset,
+                         pid=t.pid, src=t.src, dst=t.dst):
+                self._ae_pull(t.dst, t.src, t.pset)
+            self.scheduler.stats.handoff_rounds += 1
+            pumped.append(t)
+            started += 1
+        if self.sync:
+            self.settle()
+            for t in pumped:
+                if handoff_complete(self.vnodes[t.src], self.vnodes[t.dst],
+                                    t.pset):
+                    t.done = True
+        self._tick_retire()
+        return started
+
+    def _tick_retire(self) -> None:
+        for rt in self._retires:
+            if rt.done or rt.leaver in self.crashed:
+                continue
+            if any(w in self.crashed for w in rt.waits_on):
+                continue
+            leaver_vn = self.vnodes[rt.leaver]
+            if not all(
+                    handoff_complete(leaver_vn, self.vnodes[w], rt.pset)
+                    for w in rt.waits_on):
+                continue
+            if self.durable:
+                # acknowledged⇒durable across the move: the gaining owners'
+                # copies hit the WAL before the leaver's copy disappears
+                for w in rt.waits_on:
+                    self.vnodes[w].store.sync()
+            leaver_vn.drop_set(rt.pset)
+            # drop_set only writes storage tombstones; compact so the moved
+            # partition's bytes physically leave the retiring replica
+            leaver_vn.compact()
+            if self.durable:
+                leaver_vn.store.sync()
+            self.scheduler.stats.handoff_retired += 1
+            rt.done = True
+        # an old epoch retires once its transition's tasks all completed;
+        # pinned cursors then fall forward to the current ring
+        still_open = []
+        for old_epoch, hts, rts in self._transitions:
+            if all(t.done for t in hts) and all(t.done for t in rts):
+                self._retired_epochs.add(old_epoch)
+            else:
+                still_open.append((old_epoch, hts, rts))
+        self._transitions = still_open
+
     # -------------------------------------------------------- anti-entropy
     def tick(self, budget: Optional[int] = None) -> int:
         """Run one scheduler beat: pump scheduled sync rounds through the
-        network.
+        network, then the ring-handoff engine.
 
         Each round is a bidirectional pull for one (set, replica pair) —
         hottest repair-fed pairs first, then the round-robin baseline.
         Every message (request, reply) rides ``self.net``, so drop/dup/
         reorder semantics apply to anti-entropy exactly as to replication;
         a lost reply simply leaves the pair divergent for a later tick.
-        Returns the number of rounds started.
+        Returns the number of rounds started (scheduled + handoff).
         """
         rounds = self.scheduler.next_rounds(budget)
         tr = self.tracer
@@ -786,6 +1228,7 @@ class BigsetCluster(_ClusterBase):
             started += 1
         if self.sync:
             self.settle()
+        started += self._tick_handoff()
         return started
 
     def _ae_pull(self, dst: str, src: str, set_name: bytes) -> None:
@@ -913,3 +1356,45 @@ class _QuorumStream:
             if dots:
                 self.head = (el, tuple(sorted(dots)))
                 return
+
+
+class _FanInStream:
+    """Key-ordered fan-in over per-partition quorum streams.
+
+    Partitions split elements disjointly, so this is a pure k-way
+    min-by-head interleave: no cross-stream dedup, and no cross-partition
+    dot merging — each head was already quorum-merged (and read-repaired)
+    inside its own partition's clock domain by its :class:`_QuorumStream`.
+    Works for element streams (keys are elements) and index streams (keys
+    are ``(index_key, element)`` pairs) alike.  The joined ``clock`` is a
+    membership-only view, never a causal context (see
+    :meth:`BigsetCluster.read`).
+    """
+
+    def __init__(self, streams):
+        self._streams = streams
+        self.clock = Clock.zero()
+        for s in streams:
+            self.clock = self.clock.join(s.clock)
+        self.head = None
+        self._pump()
+
+    def advance(self):
+        h = self.head
+        self._pump()
+        return h
+
+    def seek_to(self, element) -> None:
+        if self.head is not None and self.head[0] >= element:
+            return
+        for s in self._streams:
+            s.seek_to(element)
+        self._pump()
+
+    def _pump(self) -> None:
+        best = None
+        for s in self._streams:
+            if s.head is not None and (best is None
+                                       or s.head[0] < best.head[0]):
+                best = s
+        self.head = None if best is None else best.advance()

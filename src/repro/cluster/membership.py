@@ -14,8 +14,10 @@ critical path.  We use the paper's machinery directly:
 * each node tracks its *incarnation* via the dots of its own entry, so a
   node that was ejected and rejoined is distinguishable from a stale view.
 
-``ClusterView.data_parallel_groups`` derives the elastic mesh assignment
-(data-axis size = |alive|) used by :mod:`repro.runtime.elastic`.
+``MembershipView.data_parallel_groups`` derives the elastic mesh
+assignment (data-axis size = |alive|), and
+:meth:`repro.cluster.placement.Ring.from_members` builds the placement
+ring from the same converged alive-set.
 """
 from __future__ import annotations
 
@@ -62,6 +64,24 @@ class MembershipView:
 
     def incarnation(self, node: str) -> Tuple:
         return self.state.context_of(node)
+
+    def data_parallel_groups(self, group_size: int = 1
+                             ) -> Tuple[Tuple[str, ...], ...]:
+        """Deterministic data-parallel mesh assignment over the alive-set.
+
+        Sorted members chunk into groups of ``group_size`` (the final
+        partial chunk is kept, so every alive node has a slot).  A pure
+        function of :meth:`members`: any two converged views compute
+        identical groups, and a join/leave perturbs only groups at and
+        after the changed node's sorted position — the stability the
+        elastic runtime (and :meth:`repro.cluster.placement.Ring.
+        from_members`, which consumes the same alive-set) relies on.
+        """
+        if group_size < 1:
+            raise ValueError("group_size must be >= 1")
+        ms = sorted(self.members())
+        return tuple(tuple(ms[i:i + group_size])
+                     for i in range(0, len(ms), group_size))
 
 
 class GossipCluster:

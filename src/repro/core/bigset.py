@@ -750,6 +750,29 @@ class BigsetVnode:
     def context_of(self, set_name: bytes, element: bytes) -> Tuple[Dot, ...]:
         return self.is_member(set_name, element)[1]
 
+    # ----------------------------------------------------------- retirement
+    def drop_set(self, set_name: bytes) -> int:
+        """Delete every key of one set — clock, tombstone, elements,
+        postings — and drop its maintained digest.  Returns keys deleted.
+
+        The ring-handoff retirement primitive: after a new owner's clock
+        provably dominates this replica's, the moved partition's local
+        copy is dead weight.  Deletion is storage-tombstone writes (the
+        keys physically leave on the next compaction); the set reads as
+        empty immediately.  Index specs stay registered, so a straggler
+        replication delta delivered after retirement still derives its
+        postings — it becomes a harmless orphan the next ring change or
+        anti-entropy round will not resurrect into queries, because
+        queries only ever cover owner vnodes.
+        """
+        lo = encode_key((set_name, KIND_CLOCK))
+        hi = encode_key((set_name, KIND_INDEX + 1))
+        batch = [(k, STORE_TOMBSTONE) for k, _v in self.store.seek(lo, hi)]
+        if batch:
+            self.store.put_batch(batch)
+        self._digests.pop(set_name, None)
+        return len(batch)
+
     # ----------------------------------------------------------- compaction
     def _compaction_filter(self, key: bytes, value: bytes) -> bool:
         """The modified-leveldb hook: drop element-keys **and** index

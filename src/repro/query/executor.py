@@ -68,6 +68,8 @@ class QueryStats:
     kernel_launches: int = 0  # batched dot_seen dispatches this query paid
     kernel_rows: int = 0      # dots those dispatches covered (pre-padding)
     strategy: str = ""     # join strategy the planner executed ("" otherwise)
+    coverage: str = ""     # ring coverage the cluster planned for this query
+                           # ("epoch=E;partitions=P;vnodes=V;r=R")
 
 
 @dataclass

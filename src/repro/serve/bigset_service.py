@@ -133,6 +133,11 @@ def dots_from_wire(wire) -> DotList:
 class _Lease:
     session: bytes
     deadline: float
+    # the ring epoch the page's coverage plan ran under: a resume re-plans
+    # under the same ring so pagination never straddles two placements; a
+    # retired epoch falls forward to the current ring (cursors are element
+    # boundaries, so the page resumes from the same element regardless)
+    epoch: Optional[int] = None
 
 
 @dataclass
@@ -336,13 +341,21 @@ class BigsetService:
         self._sweep(now)
 
         token = body.get("cursor")
+        pinned: Optional[int] = None
         if token is not None:
             plan = self._resume(plan, token, sid, now)
+            pinned = self._leases[token].epoch
         self._admit(now, resuming=token is not None)
 
+        # cursor leases pin the ring epoch their plan ran under; a fresh
+        # query plans under the current ring.  ring_for resolves a retired
+        # or unknown pinned epoch forward, and the *resolved* epoch is what
+        # the next page's lease pins.
+        ring_epoch = self.cluster.ring_for(pinned).epoch
         r = self._quorum(body)
         repair = bool(body.get("repair", True))
-        res = self.cluster.query(plan, r=r, repair=repair, session=self._acct)
+        res = self.cluster.query(plan, r=r, repair=repair, session=self._acct,
+                                 ring_epoch=ring_epoch)
         lift_query_stats(self.metrics, res.stats)
         self._note(sid, pages=1, bytes_read=res.stats.bytes_read,
                    elements=res.stats.elements_emitted,
@@ -352,7 +365,8 @@ class BigsetService:
         if token is not None:
             self._release(token)
         if res.cursor is not None:
-            out["cursor"] = self._mint(sid, sess, res.cursor, now)
+            out["cursor"] = self._mint(sid, sess, res.cursor, now,
+                                       epoch=ring_epoch)
         return out
 
     def _cap_page(self, plan: Plan) -> Plan:
@@ -384,10 +398,11 @@ class BigsetService:
                 f"plan {type(plan).__name__} does not paginate") from None
 
     def _mint(self, sid: bytes, sess: _Session, raw_cursor: bytes,
-              now: float) -> bytes:
+              now: float, epoch: Optional[int] = None) -> bytes:
         self._lease_seq += 1
         token = wrap_lease(sid, raw_cursor, nonce=self._lease_seq)
-        self._leases[token] = _Lease(sid, now + self.config.lease_ttl)
+        self._leases[token] = _Lease(sid, now + self.config.lease_ttl,
+                                     epoch=epoch)
         sess.tokens.add(token)
         return token
 
@@ -426,8 +441,14 @@ class BigsetService:
         reg.gauge("serve.mutations_applied").set(self.mutations_applied)
         reg.gauge("serve.open_cursors").set(len(self._leases))
         reg.gauge("serve.sessions").set(len(self._sessions))
-        return {"node": reg.snapshot(),
-                "session": dict(self._session_stats.get(sid, {}))}
+        out = {"node": reg.snapshot(),
+               "session": dict(self._session_stats.get(sid, {}))}
+        if hasattr(self.cluster, "ring_state"):
+            ring = self.cluster.ring_state()
+            reg.gauge("cluster.ring_epoch").set(ring["epoch"])
+            out["node"] = reg.snapshot()
+            out["ring"] = ring
+        return out
 
     def _result_to_wire(self, res: QueryResult) -> dict:
         out: dict = {
@@ -458,10 +479,14 @@ class BigsetService:
 
     def _quorum(self, body: dict) -> Optional[int]:
         r = body.get("r", self.config.default_r)
+        # quorum sizes are bounded by the ring's replication factor (== n
+        # under the degenerate full-replication ring), not the vnode count
+        max_r = getattr(getattr(self.cluster, "ring", None), "factor",
+                        self.cluster.n)
         if r is not None and (
-                not isinstance(r, int) or not 1 <= r <= self.cluster.n):
+                not isinstance(r, int) or not 1 <= r <= max_r):
             raise ServiceError(
-                "request", f"r must be an int in [1, {self.cluster.n}]")
+                "request", f"r must be an int in [1, {max_r}]")
         return r
 
     @staticmethod

@@ -1,0 +1,15 @@
+"""BS009 negative: ring-routed placement and computed vnode keys."""
+
+
+def route(cluster, ring, set_name, element):
+    pref = ring.preference_list(set_name, element)
+    owner = pref.owners[0]            # preference lists ARE the ring's verdict
+    vn = cluster.vnodes[owner]        # keyed by actor name, not position
+    quorum = cluster.actors[:2]       # a slice is a quorum prefix, not an owner
+    for a in cluster.actors:          # iteration never picks a position
+        cluster.stores[a].sync()
+    return vn, quorum
+
+
+def dynamic(cluster, i):
+    return cluster._actor(i)          # routed variable: the caller decided

@@ -1,0 +1,19 @@
+"""BS009 fixture: literal vnode indexing bypasses the ring."""
+
+
+class BadRouting:
+    def __init__(self, cluster):
+        self.cluster = cluster
+        self.actors = list(cluster.actors)
+
+    def primary(self):
+        return self.cluster.vnodes[0]               # BS009: hardwired owner
+
+    def coordinator_pair(self):
+        first = self.actors[0]                      # BS009: positional owner
+        last = self.cluster.actors[-1]              # BS009: negative literal
+        return first, last
+
+    def routed_by_position(self, stores):
+        vn = self.cluster._actor(2)                 # BS009: literal position
+        return vn, stores[1]                        # BS009: store by position

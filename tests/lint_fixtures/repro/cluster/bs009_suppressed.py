@@ -1,0 +1,5 @@
+"""BS009 suppressed: a justified literal index in a demo harness."""
+
+
+def demo_primary(cluster):
+    return cluster.vnodes[0]  # bigset-lint: disable=BS009 -- single-vnode demo harness; no ring exists to route through

@@ -54,6 +54,12 @@ GOLDEN = {
     ],
     "repro/cluster/bs008_negative.py": [],
     "repro/cluster/bs008_suppressed.py": [],
+    "repro/cluster/bs009_positive.py": [
+        ("BS009", 10), ("BS009", 13), ("BS009", 14), ("BS009", 18),
+        ("BS009", 19),
+    ],
+    "repro/cluster/bs009_negative.py": [],
+    "repro/cluster/bs009_suppressed.py": [],
     "repro/query/bs004_positive.py": [("BS004", 6), ("BS004", 11)],
     "repro/query/bs004_negative.py": [],
     "repro/query/bs004_suppressed.py": [],
@@ -97,14 +103,14 @@ class TestGoldenFixtures:
 
     def test_suppressions_counted(self, fixture_result):
         # bs001_suppressed + bs002_suppressed + bs004_suppressed
-        # + bs007_suppressed + bs008_suppressed
+        # + bs007_suppressed + bs008_suppressed + bs009_suppressed
         # + the justification-less (still applied) one in bs000_bad_*
-        assert fixture_result.suppressed == 6
+        assert fixture_result.suppressed == 7
 
     def test_all_rules_ran(self, fixture_result):
         assert fixture_result.rules == (
             "BS001", "BS002", "BS003", "BS004", "BS005", "BS006", "BS007",
-            "BS008")
+            "BS008", "BS009")
         assert set(RULES) == set(fixture_result.rules)
 
 
@@ -189,7 +195,7 @@ class TestCli:
         assert lint_main([str(FIXTURES), "--json-out", str(out)]) == 1
         doc = json.loads(out.read_text())
         assert doc["version"] == 1 and doc["ok"] is False
-        assert len(doc["findings"]) == 34
+        assert len(doc["findings"]) == 39
         assert doc["rules"] == list(RULES)
         assert lint_main([str(SRC)]) == 0
         assert lint_main(["--list-rules"]) == 0

@@ -1,7 +1,9 @@
 """Membership CRDT + elastic assignment tests."""
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.cluster.membership import GossipCluster, MembershipView
+from repro.cluster.placement import Ring
 from repro.cluster.sim import Network
 from repro.runtime.elastic import ElasticController, derive_assignment
 
@@ -62,6 +64,118 @@ class TestMembership:
         c.anti_entropy_round()   # repairs dropped deltas
         c.anti_entropy_round()
         assert c.converged()
+
+
+class TestIncarnation:
+    """A node's incarnation is the dot-context of its own entry: each
+    rejoin mints a fresh dot, so views can tell a restarted node from a
+    stale sighting of its previous life."""
+
+    def test_rejoin_bumps_incarnation(self):
+        v = MembershipView("a")
+        v.apply(v.join())
+        inc1 = v.incarnation("a")
+        v.apply(v.leave())
+        assert v.incarnation("a") == ()
+        v.apply(v.join())
+        inc2 = v.incarnation("a")
+        assert inc2 != inc1
+        # the new incarnation causally follows the ejected one
+        assert max(d.counter for d in inc2) > max(d.counter for d in inc1)
+
+    def test_eject_then_rejoin_wins_everywhere(self):
+        """Eject-then-rejoin: the rejoin's fresh dot is unseen by the
+        ejection's context, so add-wins keeps the node in every view."""
+        c = GossipCluster(3)
+        c.settle()
+        eject = c.nodes["node0"].leave("node2")
+        rejoin = c.nodes["node2"].join()
+        # deliver in both orders: converged result must be identical
+        c.nodes["node1"].apply(eject)
+        c.nodes["node1"].apply(rejoin)
+        c.nodes["node0"].apply(rejoin)
+        c.nodes["node2"].apply(eject)
+        assert c.nodes["node1"].is_member("node2")
+        assert c.nodes["node0"].is_member("node2")
+        assert c.nodes["node2"].is_member("node2")
+        # and the surviving incarnation is exactly the rejoin's dot
+        new_inc = c.nodes["node1"].incarnation("node2")
+        assert any(d.counter > 1 for d in new_inc)
+
+    def test_concurrent_join_leave_converge(self):
+        """Two views diverge on a concurrent join and leave; a pairwise
+        merge lands both on the same member set."""
+        a, b = MembershipView("a"), MembershipView("b")
+        b.apply(a.join("seed"))  # both start observing the seed node
+        da = a.join()          # a adds itself
+        db = b.join()          # b adds itself
+        a.apply(db)
+        b.apply(da)
+        dl = a.leave("seed")   # a ejects the seed...
+        dj = b.join("seed")    # ...while b concurrently re-adds it
+        a.apply(dj)
+        b.apply(dl)
+        assert a.members() == b.members()
+        assert "seed" in a.members()  # add-wins
+
+
+class TestDataParallelGroups:
+    def test_groups_cover_alive_set(self):
+        c = GossipCluster(5)
+        c.settle()
+        groups = c.nodes["node0"].data_parallel_groups(2)
+        flat = [n for g in groups for n in g]
+        assert sorted(flat) == sorted(c.nodes["node0"].members())
+        assert all(len(g) <= 2 for g in groups)
+
+    def test_groups_stable_across_converged_views(self):
+        """Pure function of members(): every converged view computes the
+        identical grouping, whatever order its deltas arrived in."""
+        c = GossipCluster(4)
+        c.settle()
+        c.node_joins("xnode9")
+        c.node_leaves("node1")
+        c.settle()
+        c.anti_entropy_round()
+        assert c.converged()
+        expected = c.nodes["node0"].data_parallel_groups(3)
+        assert all(v.data_parallel_groups(3) == expected
+                   for v in c.nodes.values())
+
+    def test_join_perturbs_only_downstream_groups(self):
+        v = MembershipView("a")
+        for n in ["a", "b", "c", "d", "e", "f"]:
+            v.apply(v.join(n))
+        before = v.data_parallel_groups(2)
+        v.apply(v.join("zz"))  # sorts last: earlier groups unchanged
+        after = v.data_parallel_groups(2)
+        assert after[:len(before)] == before
+        assert after[-1] == ("zz",)
+
+    def test_group_size_validated(self):
+        v = MembershipView("a")
+        with pytest.raises(ValueError):
+            v.data_parallel_groups(0)
+
+
+class TestRingFromMembership:
+    def test_ring_consumes_alive_set(self):
+        c = GossipCluster(5)
+        c.settle()
+        ring = Ring.from_members(c.nodes["node0"], factor=3)
+        assert set(ring.actors) == c.nodes["node0"].members()
+        # every converged view builds the identical ring
+        assert all(Ring.from_members(v, factor=3) == ring
+                   for v in c.nodes.values())
+
+    def test_ring_shrinks_with_membership(self):
+        c = GossipCluster(3)
+        c.settle()
+        c.node_leaves("node2")
+        c.settle()
+        ring = Ring.from_members(c.nodes["node0"], factor=3)
+        assert "node2" not in ring.actors
+        assert ring.factor == 2  # capped at the surviving member count
 
 
 class TestElastic:
